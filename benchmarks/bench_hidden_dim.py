@@ -1,0 +1,38 @@
+"""Paper Fig. 13a/b: hidden-dimension case study.
+
+Latency of GCN (2 layers) and GIN (5 layers) as the hidden dimension grows;
+the paper observes GIN's sharper growth (more layers + full-dim
+aggregation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, load_replica, time_fn
+from repro.models.gnn import GNNConfig, build_gnn
+
+
+def run():
+    g, spec, _ = load_replica("cora", max_nodes=2708)
+    rng = np.random.default_rng(0)
+    for arch, n_layers in [("gcn", 2), ("gin", 5)]:
+        base = None
+        for hidden in [16, 64, 256]:
+            cfg = GNNConfig(arch=arch, in_dim=128, hidden_dim=hidden,
+                            num_classes=spec.num_classes,
+                            num_layers=n_layers, backend="xla")
+            model = build_gnn(g, cfg, tune_iters=4)
+            feat = jnp.asarray(rng.standard_normal((g.num_nodes, 128)),
+                               jnp.float32)
+            featp = jnp.asarray(model.plan.renumber_features(np.asarray(feat)))
+            t = time_fn(jax.jit(lambda x: model.logits(model.params, x)),
+                        featp, warmup=1, iters=3)
+            base = base or t
+            emit(f"hidden/{arch}/h={hidden}", t * 1e6,
+                 f"norm={t / base:.2f}x (layers={n_layers})")
+
+
+if __name__ == "__main__":
+    run()

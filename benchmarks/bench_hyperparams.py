@@ -1,0 +1,73 @@
+"""Paper Fig. 11: impact of group-size (gs), thread-per-block analogue
+(gpt), and dimension-worker analogue (dt) on performance.
+
+Reported per setting: measured CPU time of the grouped XLA path (relative,
+normalized to the first setting — the paper's Fig. 11 normalization),
+predicted TPU latency from the white-box model, and the schedule quality
+counters (tiles = window DMAs, slot occupancy).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, load_replica, time_fn
+from repro.core.extractor import extract_graph_props
+from repro.core.model import AggConfig, KernelModel
+from repro.core.partition import partition_graph, partition_stats
+from repro.kernels.ops import DeviceSchedule, aggregate
+
+DATASET = "artist"       # the paper's Fig. 11a dataset
+DIM = 64
+
+
+def _measure(g, feat, props, km, **cfg_kw):
+    cfg = AggConfig(**cfg_kw)
+    p = partition_graph(g, gs=cfg.gs, gpt=cfg.gpt, ont=cfg.ont,
+                        src_win=cfg.src_win)
+    sched = DeviceSchedule(p)
+    t = time_fn(jax.jit(lambda f: aggregate(f, sched, backend="xla")), feat,
+                warmup=1, iters=3)
+    tpu = km.latency(props, DIM, cfg, tiles=p.num_tiles)
+    s = partition_stats(p)
+    return t, tpu, s
+
+
+def run():
+    g, _, _ = load_replica(DATASET, max_nodes=3000)
+    rng = np.random.default_rng(0)
+    feat = jnp.asarray(rng.standard_normal((g.num_nodes, DIM)), jnp.float32)
+    props = extract_graph_props(g, detect_communities=False)
+    km = KernelModel()
+
+    base_t = None
+    for gs in [1, 4, 8, 16, 32, 64]:
+        t, tpu, s = _measure(g, feat, props, km, gs=gs, gpt=16, src_win=256)
+        base_t = base_t or t
+        emit(f"hyper/{DATASET}/gs={gs}", t * 1e6,
+             f"norm={t / base_t * 100:.0f}% tpu_model_us={tpu*1e6:.1f} "
+             f"tiles={s['tiles']} occ={s['slot_occupancy']:.2f}")
+    base_t = None
+    for gpt in [4, 8, 16, 32, 64, 128]:
+        t, tpu, s = _measure(g, feat, props, km, gs=16, gpt=gpt, src_win=256)
+        base_t = base_t or t
+        emit(f"hyper/{DATASET}/gpt={gpt}", t * 1e6,
+             f"norm={t / base_t * 100:.0f}% tpu_model_us={tpu*1e6:.1f} "
+             f"tiles={s['tiles']}")
+    base_t = None
+    for dt in [8, 16, 32, 64, 128]:
+        cfg = AggConfig(gs=16, gpt=16, dt=dt, src_win=256)
+        p = partition_graph(g, gs=16, gpt=16, ont=8, src_win=256)
+        sched = DeviceSchedule(p)
+        t = time_fn(jax.jit(lambda f: aggregate(f, sched, backend="xla",
+                                                dt=dt)), feat,
+                    warmup=1, iters=3)
+        base_t = base_t or t
+        tpu = km.latency(props, DIM, cfg, tiles=p.num_tiles)
+        emit(f"hyper/{DATASET}/dt={dt}", t * 1e6,
+             f"norm={t / base_t * 100:.0f}% tpu_model_us={tpu*1e6:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Paper Eq. 2 validation: does the analytical model RANK configurations
+correctly?  (A tuner only needs ranking quality, not absolute accuracy.)
+
+Spearman rank correlation between measured CPU wall-time of the grouped
+path and (a) the literal paper Eq. 2 surrogate, (b) the TPU white-box
+KernelModel, over a sample of feasible configs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, load_replica, time_fn
+from repro.core.extractor import extract_graph_props
+from repro.core.model import AggConfig, KernelModel, config_is_feasible, paper_eq2_latency
+from repro.core.partition import partition_graph
+from repro.kernels.ops import DeviceSchedule, aggregate
+
+DIM = 64
+
+
+def _spearman(a, b):
+    ra = np.argsort(np.argsort(a)).astype(float)
+    rb = np.argsort(np.argsort(b)).astype(float)
+    ra -= ra.mean(); rb -= rb.mean()
+    return float((ra * rb).sum() / np.sqrt((ra**2).sum() * (rb**2).sum()))
+
+
+def run():
+    g, _, _ = load_replica("pubmed", max_nodes=3000)
+    rng = np.random.default_rng(0)
+    feat = jnp.asarray(rng.standard_normal((g.num_nodes, DIM)), jnp.float32)
+    props = extract_graph_props(g, detect_communities=False)
+    km = KernelModel()
+
+    configs = []
+    for gs in [4, 8, 16, 32]:
+        for gpt in [8, 16, 64]:
+            for src_win in [128, 512]:
+                c = AggConfig(gs=gs, gpt=gpt, src_win=src_win)
+                if config_is_feasible(c):
+                    configs.append(c)
+    measured, eq2, whitebox = [], [], []
+    for c in configs:
+        p = partition_graph(g, gs=c.gs, gpt=c.gpt, ont=c.ont,
+                            src_win=c.src_win)
+        sched = DeviceSchedule(p)
+        t = time_fn(jax.jit(lambda f: aggregate(f, sched, backend="xla")),
+                    feat, warmup=1, iters=3)
+        measured.append(t)
+        eq2.append(paper_eq2_latency(props, DIM, c))
+        whitebox.append(km.latency(props, DIM, c, tiles=p.num_tiles))
+    rho_eq2 = _spearman(np.asarray(measured), np.asarray(eq2))
+    rho_wb = _spearman(np.asarray(measured), np.asarray(whitebox))
+    emit("modelfit/pubmed", float(np.mean(measured)) * 1e6,
+         f"spearman_eq2={rho_eq2:.3f} spearman_whitebox={rho_wb:.3f} "
+         f"n_configs={len(configs)}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Shared benchmark helpers: timing, dataset loading, output formatting."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+__all__ = ["time_fn", "emit", "load_replica"]
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time (s) of a jax function (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def load_replica(name: str, *, max_nodes: int = 4000, seed: int = 0):
+    from repro.graphs.datasets import make_dataset
+    return make_dataset(name, max_nodes=max_nodes, seed=seed)

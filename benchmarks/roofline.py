@@ -1,0 +1,74 @@
+"""Roofline table from the dry-run reports (deliverable g).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun), prints the
+per-(arch x shape x mesh) three-term roofline and emits the markdown table
+EXPERIMENTS.md §Roofline embeds.  Pure aggregation — no jax needed.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_reports(dryrun_dir: str = DRYRUN_DIR) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def markdown_table(reports: list[dict]) -> str:
+    rows = ["| arch | shape | mesh | compute s | memory s | collective s | "
+            "dominant | useful FLOPs ratio | temp GiB/chip |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(reports, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if "skipped" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"— | — | — | skipped ({r['skipped'][:40]}…) | — | — |")
+            continue
+        rl = r["roofline"]
+        ur = r.get("useful_flops_ratio")
+        temp = r["memory"].get("temp_size_in_bytes", 0) / 2**30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{rl['t_compute_s']:.4f} | {rl['t_memory_s']:.4f} | "
+            f"{rl['t_collective_s']:.4f} | {rl['dominant']} | "
+            f"{ur:.3f} | {temp:.1f} |" if ur is not None else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{rl['t_compute_s']:.4f} | {rl['t_memory_s']:.4f} | "
+            f"{rl['t_collective_s']:.4f} | {rl['dominant']} | n/a | "
+            f"{temp:.1f} |")
+    return "\n".join(rows)
+
+
+def run():
+    reports = load_reports()
+    if not reports:
+        emit("roofline/none", 0.0, "no dry-run reports found — run "
+             "PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both")
+        return
+    n_ok = sum(1 for r in reports if "skipped" not in r)
+    n_skip = len(reports) - n_ok
+    emit("roofline/cells", 0.0, f"compiled={n_ok} skipped={n_skip}")
+    dominant = {}
+    for r in reports:
+        if "skipped" in r:
+            continue
+        rl = r["roofline"]
+        dominant[rl["dominant"]] = dominant.get(rl["dominant"], 0) + 1
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+             rl["bound_s"] * 1e6,
+             f"compute={rl['t_compute_s']:.4f}s memory={rl['t_memory_s']:.4f}s "
+             f"collective={rl['t_collective_s']:.4f}s dom={rl['dominant']} "
+             f"useful={r.get('useful_flops_ratio') or 0:.3f}")
+    emit("roofline/dominant_terms", 0.0, str(dominant))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Benchmark entry point: one section per paper table/figure + the roofline
+aggregation.  CSV contract per line: name,us_per_call,derived.
+
+    PYTHONPATH=src python -m benchmarks.run [section ...]
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+SECTIONS = [
+    ("aggregation (Fig. 4 / §8.2)", "benchmarks.bench_aggregation"),
+    ("hyperparams (Fig. 11)", "benchmarks.bench_hyperparams"),
+    ("reorder (Fig. 12a/b)", "benchmarks.bench_reorder"),
+    ("block-opt (Fig. 12c)", "benchmarks.bench_block_opt"),
+    ("model-fit (Eq. 2)", "benchmarks.bench_model_fit"),
+    ("tuner (§7.2)", "benchmarks.bench_tuner"),
+    ("speedup (Fig. 8/10)", "benchmarks.bench_speedup"),
+    ("hidden-dim (Fig. 13)", "benchmarks.bench_hidden_dim"),
+    ("straggler fleet sim (runtime)", "benchmarks.bench_straggler"),
+    ("roofline (§Roofline)", "benchmarks.roofline"),
+]
+
+
+def main() -> int:
+    import importlib
+    want = set(sys.argv[1:])
+    failed = []
+    for title, module in SECTIONS:
+        if want and not any(w in module for w in want):
+            continue
+        print(f"# === {title} ===")
+        t0 = time.time()
+        try:
+            importlib.import_module(module).run()
+        except Exception:
+            traceback.print_exc()
+            failed.append(module)
+        print(f"# ({module}: {time.time() - t0:.1f}s)")
+    if failed:
+        print(f"# FAILED sections: {failed}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

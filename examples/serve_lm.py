@@ -1,0 +1,14 @@
+"""Serve a small LM with batched requests: greedy/temperature decoding over
+the KV/SSM cache path for any assigned architecture (reduced config on CPU).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch olmoe-1b-7b
+    PYTHONPATH=src python examples/serve_lm.py --arch falcon-mamba-7b
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:] if len(sys.argv) > 1
+                  else ["--arch", "olmoe-1b-7b", "--batch", "4",
+                        "--prompt-len", "8", "--gen-len", "24"]))

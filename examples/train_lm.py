@@ -1,0 +1,14 @@
+"""Train a reduced LM config end-to-end with fault injection + restart:
+demonstrates the same trainer loop the cluster driver uses.
+
+    PYTHONPATH=src python examples/train_lm.py --arch gemma2-2b --steps 60
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:] if len(sys.argv) > 1
+                  else ["--arch", "gemma2-2b", "--steps", "60",
+                        "--global-batch", "8", "--seq-len", "64",
+                        "--fail-at", "30", "--ckpt-every", "20"]))

@@ -1,0 +1,39 @@
+"""Architecture registry: the 10 assigned LM architectures (+ the paper's
+own GCN/GIN benchmark configs in `paper_gnn`).
+
+Usage:  from repro.configs import get_arch, ARCHS
+        cfg = get_arch("gemma2-9b").full()
+"""
+from __future__ import annotations
+
+from repro.configs.base import (ArchDef, SHAPES, ShapeDef, abstract_cache,
+                                cell_is_runnable, input_specs)
+from repro.configs.falcon_mamba_7b import ARCH as _falcon_mamba
+from repro.configs.gemma2_2b import ARCH as _gemma2_2b
+from repro.configs.gemma2_9b import ARCH as _gemma2_9b
+from repro.configs.h2o_danube_1_8b import ARCH as _danube
+from repro.configs.jamba_v0_1_52b import ARCH as _jamba
+from repro.configs.musicgen_large import ARCH as _musicgen
+from repro.configs.olmoe_1b_7b import ARCH as _olmoe
+from repro.configs.qwen2_vl_2b import ARCH as _qwen2vl
+from repro.configs.qwen3_moe_235b_a22b import ARCH as _qwen3moe
+from repro.configs.starcoder2_15b import ARCH as _starcoder2
+
+ARCHS = {a.name: a for a in [
+    _musicgen, _gemma2_2b, _gemma2_9b, _starcoder2, _danube,
+    _jamba, _qwen3moe, _olmoe, _qwen2vl, _falcon_mamba,
+]}
+
+
+def get_arch(name: str) -> ArchDef:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def arch_names() -> list[str]:
+    return list(ARCHS)
+
+
+__all__ = ["ARCHS", "ArchDef", "SHAPES", "ShapeDef", "abstract_cache",
+           "arch_names", "cell_is_runnable", "get_arch", "input_specs"]

@@ -1,0 +1,111 @@
+"""Architecture registry machinery + assigned input shapes.
+
+Each assigned architecture file defines an `ArchDef`:
+  * `full()`    — the exact published configuration (used ONLY via the
+                  allocation-free dry-run: ShapeDtypeStructs, never real
+                  arrays on this CPU container);
+  * `reduced()` — a same-family small config for CPU smoke tests (same
+                  period structure, same feature flags, tiny dims).
+
+`input_specs(cfg, shape)` builds the ShapeDtypeStruct stand-ins for every
+model input of a (config × assigned-shape) cell, matching the signatures of
+models.lm's train / prefill / decode step functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.transformer import LMConfig, init_lm_cache
+
+__all__ = ["ArchDef", "ShapeDef", "SHAPES", "input_specs", "cell_is_runnable",
+           "abstract_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeDef:
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeDef("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeDef("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeDef("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeDef("long_500k", "decode", 524_288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchDef:
+    name: str
+    family: str                       # dense | moe | hybrid | ssm | vlm | audio
+    full: Callable[[], LMConfig]
+    reduced: Callable[[], LMConfig]
+    source: str = ""
+    notes: str = ""
+
+    def supports_long(self) -> bool:
+        """long_500k needs a sub-quadratic decode mechanism: an SSM state or
+        a sliding window on every full-attention-free path.  Archs whose
+        period has ONLY unwindowed attention are skipped (DESIGN.md
+        §Arch-applicability)."""
+        cfg = self.full()
+        kinds = [(s.kind, s.window) for s in cfg.period]
+        has_ssm = any(k == "mamba" for k, _ in kinds)
+        has_window = any(w is not None for k, w in kinds if k == "attn")
+        return has_ssm or has_window
+
+
+def cell_is_runnable(arch: ArchDef, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and not arch.supports_long():
+        return False, ("pure full-attention arch: no sub-quadratic mechanism "
+                       "for 524288-token decode (skip per assignment)")
+    return True, ""
+
+
+def abstract_cache(cfg: LMConfig, batch: int, max_seq: int):
+    """KV/SSM-cache ShapeDtypeStructs without allocating."""
+    return jax.eval_shape(
+        lambda: init_lm_cache(cfg, batch, max_seq=max_seq, dtype=jnp.bfloat16))
+
+
+def input_specs(cfg: LMConfig, shape: ShapeDef) -> dict:
+    """ShapeDtypeStruct stand-ins for one (config × shape) cell.
+
+    train   -> {"batch": {...}}                        (train_step operand)
+    prefill -> {"inputs": ..., "pos": ...}             (prefill operands)
+    decode  -> {"cache": ..., "tok": ..., "t": ...}    (decode operands)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    def pos_struct(batch, seq):
+        if cfg.rope == "mrope":
+            return sds((batch, 3, seq), i32)
+        return sds((batch, seq), i32)
+
+    if shape.kind == "train":
+        batch = {"labels": sds((B, S), i32), "pos": pos_struct(B, S)}
+        if cfg.frontend == "tokens":
+            batch["tokens"] = sds((B, S), i32)
+        else:
+            batch["embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        inputs = (sds((B, S), i32) if cfg.frontend == "tokens"
+                  else sds((B, S, cfg.d_model), jnp.bfloat16))
+        return {"inputs": inputs, "pos": pos_struct(B, S)}
+
+    # decode: one new token against a seq_len-deep cache
+    cache = abstract_cache(cfg, B, S)
+    tok = (sds((B,), i32) if cfg.frontend == "tokens"
+           else sds((B, cfg.d_model), jnp.bfloat16))
+    return {"cache": cache, "tok": tok, "t": sds((), i32)}

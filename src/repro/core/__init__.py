@@ -1,0 +1,16 @@
+"""GNNAdvisor core: the paper's contribution as a composable JAX module."""
+from repro.core.advisor import AggregationPlan, advise
+from repro.core.aggregate import PlanExecutor
+from repro.core.extractor import extract_arch_props, extract_graph_props
+from repro.core.model import AggConfig, KernelModel, paper_eq2_latency
+from repro.core.partition import GroupPartition, partition_graph, partition_stats
+from repro.core.reorder import renumber
+from repro.core.tuner import tune
+
+__all__ = [
+    "AggregationPlan", "advise", "PlanExecutor",
+    "extract_arch_props", "extract_graph_props",
+    "AggConfig", "KernelModel", "paper_eq2_latency",
+    "GroupPartition", "partition_graph", "partition_stats",
+    "renumber", "tune",
+]

@@ -1,0 +1,121 @@
+"""The Advisor — ties the whole §4-§7 loop together (paper Fig. 1/Fig. 7).
+
+  input extractor -> performance evaluator (model+tuner) -> kernel & runtime
+  crafter (renumbering + partition + kernel dispatch).
+
+`advise()` is the one-call entry point: given a graph + GNN architecture it
+returns an executable `AggregationPlan` with everything the runtime needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.extractor import (GNNArchProps, GraphProps, extract_arch_props,
+                                  extract_graph_props)
+from repro.core.model import AggConfig, KernelModel
+from repro.core.partition import GroupPartition, partition_graph, partition_stats
+from repro.core.reorder import apply_renumbering, renumber
+from repro.core.tuner import TunerResult, tune
+from repro.graphs.csr import CSRGraph
+
+__all__ = ["AggregationPlan", "advise"]
+
+
+@dataclasses.dataclass
+class AggregationPlan:
+    """Everything needed to run aggregation for one graph."""
+
+    graph: CSRGraph                    # possibly renumbered
+    partition: GroupPartition
+    config: AggConfig
+    graph_props: GraphProps
+    arch: GNNArchProps
+    perm: Optional[np.ndarray]         # old->new node ids (None = identity)
+    tuner: Optional[TunerResult]
+    stats: dict
+    reduce_dim_first: bool             # §4.2 aggregation placement decision
+
+    def renumber_features(self, feat: np.ndarray) -> np.ndarray:
+        if self.perm is None:
+            return feat
+        inv = np.empty_like(self.perm)
+        inv[self.perm] = np.arange(len(self.perm))
+        return feat[inv]
+
+    def restore_order(self, out):
+        """Map kernel output (new numbering) back to the original node order."""
+        if self.perm is None:
+            return out
+        return out[self.perm]
+
+
+def advise(g: CSRGraph, *, arch: str = "gcn", in_dim: int = 128,
+           hidden_dim: int = 128, num_layers: int = 2,
+           edge_vals: Optional[np.ndarray] = None,
+           reorder: str = "auto",        # "auto" | "on" | "off"
+           tune_mode: str = "model", tune_iters: int = 12,
+           config: Optional[AggConfig] = None, seed: int = 0) -> AggregationPlan:
+    """Run the full GNNAdvisor decision loop for one input.
+
+    reorder="auto" applies §6.1 renumbering unless the input already shows
+    strong numbering locality (Type-II batched graphs arrive pre-localized —
+    §8.2 notes their consecutive-ID structure) or community structure is too
+    irregular to help (the `artist` pathology, §8.6.2).
+    """
+    props = extract_graph_props(g)
+    archp = extract_arch_props(arch, in_dim, hidden_dim, num_layers)
+
+    # --- §6.1 renumbering decision ---
+    do_reorder = {"on": True, "off": False}.get(reorder)
+    if do_reorder is None:
+        already_local = props.numbering_spread < 0.02
+        irregular = (props.community_size_stddev
+                     > 1.5 * max(props.community_size_mean, 1.0))
+        do_reorder = not already_local and not irregular
+    perm = None
+    g_run = g
+    vals_run = edge_vals
+    if do_reorder:
+        perm = renumber(g, seed=seed)
+        g_run = g.permute(perm)
+        if edge_vals is not None:
+            vals_run = _permute_edge_vals(g, perm, edge_vals)
+        props = extract_graph_props(g_run, detect_communities=False)
+
+    # --- §7 modeling & estimating ---
+    tuner_res = None
+    if config is None:
+        tuner_res = tune(g_run, archp.hidden_dim if archp.reduce_dim_first
+                         else archp.in_dim,
+                         props=props, mode=tune_mode, iters=tune_iters, seed=seed)
+        config = tuner_res.best
+
+    # --- §5 group partitioning ---
+    part = partition_graph(g_run, gs=config.gs, gpt=config.gpt, ont=config.ont,
+                           src_win=config.src_win, edge_vals=vals_run)
+    return AggregationPlan(
+        graph=g_run, partition=part, config=config, graph_props=props,
+        arch=archp, perm=perm, tuner=tuner_res, stats=partition_stats(part),
+        reduce_dim_first=archp.reduce_dim_first,
+    )
+
+
+def _permute_edge_vals(g: CSRGraph, perm: np.ndarray,
+                       edge_vals: np.ndarray) -> np.ndarray:
+    """Carry per-edge values through `CSRGraph.permute`'s exact edge order."""
+    n = g.num_nodes
+    inv = np.empty(n, dtype=np.int64)
+    inv[perm] = np.arange(n)
+    out = np.empty_like(np.asarray(edge_vals, dtype=np.float32))
+    pos = 0
+    for new_v in range(n):
+        old_v = inv[new_v]
+        s, e = g.indptr[old_v], g.indptr[old_v + 1]
+        nbrs = perm[g.indices[s:e]]
+        order = np.argsort(nbrs)
+        out[pos:pos + (e - s)] = np.asarray(edge_vals[s:e], np.float32)[order]
+        pos += e - s
+    return out

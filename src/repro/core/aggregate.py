@@ -1,0 +1,51 @@
+"""High-level aggregation API used by GNN layers.
+
+Bridges an `AggregationPlan` (advisor output) to executable JAX functions.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.advisor import AggregationPlan
+from repro.kernels.ops import DeviceSchedule, aggregate as _kernel_aggregate
+
+__all__ = ["PlanExecutor"]
+
+
+class PlanExecutor:
+    """Executable aggregation bound to one plan (device-resident schedule)."""
+
+    def __init__(self, plan: AggregationPlan, *,
+                 backend: str = "pallas_interpret"):
+        self.plan = plan
+        self.sched = DeviceSchedule(plan.partition)
+        self.backend = backend
+        self.dt = plan.config.dt
+        self.variant = plan.config.variant
+
+    def __call__(self, feat: jax.Array) -> jax.Array:
+        """feat: (N, D) in the plan's (renumbered) node order -> (N, D) f32."""
+        return _kernel_aggregate(feat, self.sched, dt=self.dt,
+                                 backend=self.backend, variant=self.variant)
+
+    def aggregate_edges(self, feat: jax.Array,
+                        edge_values: jax.Array) -> jax.Array:
+        """Aggregation with DYNAMIC per-edge weights (original CSR edge
+        order of the plan's graph) — the GAT-type path: the schedule is
+        reused, only the edge-value tensor is re-scattered per forward."""
+        return _kernel_aggregate(feat, self.sched, dt=self.dt,
+                                 backend=self.backend, variant=self.variant,
+                                 edge_values=edge_values)
+
+    def aggregate_original_order(self, feat_original: jax.Array) -> jax.Array:
+        """Convenience: accepts/returns arrays in the ORIGINAL node order."""
+        plan = self.plan
+        if plan.perm is None:
+            return self(feat_original)
+        perm = jnp.asarray(plan.perm)
+        inv = jnp.argsort(perm)
+        out = self(feat_original[inv])
+        return out[perm]

@@ -1,0 +1,158 @@
+"""Estimating (paper §7.2) — hyper-parameter search with community profiling.
+
+Implements the paper's three-step strategy:
+
+  1. *Community profiling*: generate synthetic communities at 90/70/50%
+     densities over the typical community sizes observed in the input, and
+     evaluate candidate settings on them (here: with the white-box kernel
+     model over EXACT tile counts from real partitions of the synthetic
+     communities — the offline-profiling analogue).
+  2. *Estimation*: score a given (graph, GNN) input with the calibrated
+     model without building full schedules.
+  3. *Evolutionary optimization*: population → keep elite → crossover +
+     mutation, 10–15 iterations (paper: "10-15 iterations … enough").
+
+The search space is the TPU knob set (gs, gpt, dt, src_win) constrained by
+the Eq. 3/4 feasibility re-derivations in `core.model`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.extractor import GraphProps, extract_graph_props
+from repro.core.model import AggConfig, KernelModel, config_is_feasible, paper_eq2_latency
+from repro.core.partition import partition_graph, partition_stats
+from repro.graphs.csr import CSRGraph, random_community_graph
+
+__all__ = ["TunerResult", "evolve", "tune", "community_profile", "SEARCH_SPACE"]
+
+SEARCH_SPACE = {
+    "gs": [4, 8, 16, 32, 64],
+    "gpt": [8, 16, 32, 64, 128],
+    "dt": [64, 128, 256, 512],
+    "src_win": [128, 256, 512, 1024, 2048],
+}
+
+
+@dataclasses.dataclass
+class TunerResult:
+    best: AggConfig
+    best_score: float
+    history: list  # (iteration, best_score)
+    evaluations: int
+
+
+def _random_config(rng: np.random.Generator) -> AggConfig:
+    return AggConfig(
+        gs=int(rng.choice(SEARCH_SPACE["gs"])),
+        gpt=int(rng.choice(SEARCH_SPACE["gpt"])),
+        dt=int(rng.choice(SEARCH_SPACE["dt"])),
+        src_win=int(rng.choice(SEARCH_SPACE["src_win"])),
+    )
+
+
+def _crossover(a: AggConfig, b: AggConfig, rng: np.random.Generator) -> AggConfig:
+    pick = lambda x, y: x if rng.random() < 0.5 else y
+    return AggConfig(gs=pick(a.gs, b.gs), gpt=pick(a.gpt, b.gpt),
+                     dt=pick(a.dt, b.dt), src_win=pick(a.src_win, b.src_win))
+
+
+def _mutate(c: AggConfig, rng: np.random.Generator, p: float = 0.25) -> AggConfig:
+    kw = dataclasses.asdict(c)
+    for k, space in SEARCH_SPACE.items():
+        if rng.random() < p:
+            vals = space
+            i = vals.index(kw[k]) if kw[k] in vals else len(vals) // 2
+            j = int(np.clip(i + rng.integers(-1, 2), 0, len(vals) - 1))
+            kw[k] = vals[j]
+    return AggConfig(**kw)
+
+
+def evolve(score_fn: Callable[[AggConfig], float], *, pop: int = 16,
+           iters: int = 12, elite: int = 4, seed: int = 0) -> TunerResult:
+    """Generic evolutionary loop (lower score = better)."""
+    rng = np.random.default_rng(seed)
+    population = []
+    while len(population) < pop:
+        c = _random_config(rng)
+        if config_is_feasible(c):
+            population.append(c)
+    evals = 0
+    history = []
+    scored = []
+    for c in population:
+        scored.append((score_fn(c), c)); evals += 1
+    for it in range(iters):
+        scored.sort(key=lambda x: x[0])
+        history.append((it, scored[0][0]))
+        keep = [c for _, c in scored[:elite]]
+        children = []
+        while len(children) < pop - elite:
+            a, b = rng.choice(len(keep), 2, replace=True)
+            child = _mutate(_crossover(keep[a], keep[b], rng), rng)
+            if config_is_feasible(child):
+                children.append(child)
+        scored = scored[:elite] + [(score_fn(c), c) for c in children]
+        evals += len(children)
+    scored.sort(key=lambda x: x[0])
+    history.append((iters, scored[0][0]))
+    return TunerResult(best=scored[0][1], best_score=scored[0][0],
+                       history=history, evaluations=evals)
+
+
+def community_profile(community_sizes: Sequence[int], dim: int, *,
+                      densities: Sequence[float] = (0.9, 0.7, 0.5),
+                      seed: int = 0) -> Callable[[AggConfig], float]:
+    """Step 1: build a profiling score over synthetic communities.
+
+    Returns a score function that evaluates a config by building REAL
+    partitions over the synthetic community graphs and pricing them with the
+    white-box model over exact tile counts.
+    """
+    graphs: list[CSRGraph] = []
+    for cs in community_sizes:
+        for rho in densities:
+            g = random_community_graph(max(4, 2048 // max(cs, 2)), cs,
+                                       p_intra=rho, p_inter_edges_per_node=0.2,
+                                       seed=seed)
+            graphs.append(g)
+    props = [extract_graph_props(g, detect_communities=False) for g in graphs]
+    km = KernelModel()
+
+    def score(cfg: AggConfig) -> float:
+        tot = 0.0
+        for g, pr in zip(graphs, props):
+            p = partition_graph(g, gs=cfg.gs, gpt=cfg.gpt, ont=cfg.ont,
+                                src_win=cfg.src_win)
+            tot += km.latency(pr, dim, cfg, tiles=p.num_tiles)
+        return tot / len(graphs)
+
+    return score
+
+
+def tune(g: CSRGraph, dim: int, *, props: GraphProps | None = None,
+         mode: str = "model", iters: int = 12, pop: int = 16,
+         seed: int = 0) -> TunerResult:
+    """Pick (gs, gpt, dt, src_win) for a given graph and embedding dim.
+
+    mode="model":   white-box model over predicted tile counts (fast; §7.1).
+    mode="profile": score by building real partitions (exact tiles; §7.2).
+    mode="paper":   literal Eq. 2 surrogate (fidelity baseline).
+    """
+    pr = props or extract_graph_props(g, detect_communities=False)
+    km = KernelModel()
+    if mode == "model":
+        score = lambda c: km.latency(pr, dim, c)
+    elif mode == "profile":
+        def score(c: AggConfig) -> float:
+            p = partition_graph(g, gs=c.gs, gpt=c.gpt, ont=c.ont, src_win=c.src_win)
+            return km.latency(pr, dim, c, tiles=p.num_tiles)
+    elif mode == "paper":
+        score = lambda c: paper_eq2_latency(pr, dim, c)
+    else:
+        raise ValueError(mode)
+    return evolve(score, pop=pop, iters=iters, seed=seed)

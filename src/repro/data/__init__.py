@@ -1,0 +1,4 @@
+"""Data substrate: deterministic sharded synthetic pipelines."""
+from repro.data.pipeline import PipelineConfig, TokenPipeline, make_lm_batch
+
+__all__ = ["PipelineConfig", "TokenPipeline", "make_lm_batch"]

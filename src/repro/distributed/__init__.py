@@ -1,0 +1,11 @@
+"""Distribution substrate: sharding rules application, microbatch accumulation."""
+from repro.distributed.accumulate import accumulate_gradients, split_batch
+from repro.distributed.sharding import (batch_axes_for, batch_spec, constrain,
+                                        named_shardings, prune_specs_for_mesh,
+                                        replicated, valid_spec)
+
+__all__ = [
+    "accumulate_gradients", "split_batch",
+    "batch_axes_for", "batch_spec", "constrain", "named_shardings",
+    "prune_specs_for_mesh", "replicated", "valid_spec",
+]

@@ -1,0 +1,63 @@
+"""Microbatched gradient accumulation.
+
+`accumulate_gradients` scans a loss/grad function over `n_micro` slices of
+the batch, summing gradients in f32.  Because the scan body ends in the
+gradient reduce-scatter/all-reduce XLA inserts for FSDP/DP params, XLA's
+latency-hiding scheduler overlaps microbatch i's gradient collectives with
+microbatch i+1's forward compute — the standard comm/compute overlap
+pattern, obtained structurally rather than with manual async collectives.
+
+Shapes: every batch leaf is (n_micro * mb, ...) and is reshaped to
+(n_micro, mb, ...) for the scan; metric pytrees are averaged.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+__all__ = ["accumulate_gradients", "split_batch"]
+
+
+def split_batch(batch: Pytree, n_micro: int) -> Pytree:
+    def r(x):
+        assert x.shape[0] % n_micro == 0, (x.shape, n_micro)
+        return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def accumulate_gradients(loss_fn: Callable, params: Pytree, batch: Pytree,
+                         n_micro: int):
+    """loss_fn(params, microbatch) -> (loss, metrics).
+
+    Returns (grads_mean, loss_mean, metrics_mean).
+    """
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    if n_micro == 1:
+        (loss, metrics), grads = grad_fn(params, batch)
+        return grads, loss, metrics
+
+    micro = split_batch(batch, n_micro)
+
+    def body(acc, mb):
+        g_acc, l_acc, m_acc = acc
+        (loss, metrics), grads = grad_fn(params, mb)
+        g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                             g_acc, grads)
+        m_acc = jax.tree.map(lambda a, m: a + m.astype(jnp.float32),
+                             m_acc, metrics)
+        return (g_acc, l_acc + loss, m_acc), None
+
+    zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    # metrics structure: probe with eval_shape (no FLOPs spent)
+    m_shape = jax.eval_shape(lambda p, b: loss_fn(p, b)[1], params,
+                             jax.tree.map(lambda x: x[0], micro))
+    zeros_m = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), m_shape)
+    (grads, loss, metrics), _ = jax.lax.scan(
+        body, (zeros_g, jnp.float32(0), zeros_m), micro)
+    inv = 1.0 / n_micro
+    return (jax.tree.map(lambda g: g * inv, grads), loss * inv,
+            jax.tree.map(lambda m: m * inv, metrics))

@@ -1,0 +1,74 @@
+"""Sharding helpers: logical-spec pytrees -> NamedSharding pytrees, activation
+constraints, and batch-spec construction for the production meshes.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.nn.layers import DEFAULT_RULES, ShardingRules
+
+Pytree = Any
+
+__all__ = ["named_shardings", "valid_spec", "batch_axes_for", "batch_spec",
+           "constrain", "prune_specs_for_mesh", "replicated"]
+
+
+def batch_axes_for(mesh: Mesh) -> tuple:
+    """Mesh axes that carry data parallelism (pod is pure DP)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh, extra_dims: int = 1) -> P:
+    """(batch, ...) activations: batch over (pod, data)."""
+    return P(batch_axes_for(mesh), *([None] * extra_dims))
+
+
+def valid_spec(mesh: Mesh, spec: P, shape: tuple) -> P:
+    """Drop spec entries whose mesh axis doesn't exist or doesn't divide the
+    dim (GSPMD supports uneven sharding, but even layouts lower to cleaner
+    collectives — and kv-head counts smaller than the model axis MUST fall
+    back to replication)."""
+    out = []
+    for i, ax in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        axes = ax if isinstance(ax, (tuple, list)) else (ax,)
+        axes = tuple(a for a in axes if a is not None and a in mesh.axis_names)
+        size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if not axes or shape[i] % size != 0:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    return P(*out)
+
+
+def prune_specs_for_mesh(mesh: Mesh, specs: Pytree, shapes: Pytree) -> Pytree:
+    """Apply `valid_spec` leaf-wise (shapes: pytree of array-likes or
+    ShapeDtypeStructs with .shape)."""
+    return jax.tree.map(
+        lambda sp, arr: valid_spec(mesh, sp, tuple(arr.shape)), specs, shapes,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def named_shardings(mesh: Mesh, specs: Pytree, shapes: Optional[Pytree] = None
+                    ) -> Pytree:
+    """PartitionSpec pytree -> NamedSharding pytree (optionally validated
+    against `shapes`)."""
+    if shapes is not None:
+        specs = prune_specs_for_mesh(mesh, specs, shapes)
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def constrain(x: jax.Array, mesh: Mesh, spec: P) -> jax.Array:
+    """with_sharding_constraint with divisibility validation."""
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, valid_spec(mesh, spec, x.shape)))

@@ -1,0 +1,13 @@
+"""Graph substrate: CSR structures, synthetic generators, paper-dataset replicas."""
+from repro.graphs.csr import CSRGraph, from_edges, random_power_law, random_community_graph
+from repro.graphs.datasets import PAPER_DATASETS, make_dataset, dataset_names
+
+__all__ = [
+    "CSRGraph",
+    "from_edges",
+    "random_power_law",
+    "random_community_graph",
+    "PAPER_DATASETS",
+    "make_dataset",
+    "dataset_names",
+]

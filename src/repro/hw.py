@@ -1,0 +1,48 @@
+"""Target-hardware constants (TPU v5e) used by the analytical model,
+the advisor, and the roofline analysis.
+
+The container runs on CPU; these constants describe the TARGET the system is
+designed and analyzed for (assignment: 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["TPUSpec", "TPU_V5E", "MXU_DIM", "SUBLANES", "LANES"]
+
+MXU_DIM = 128      # systolic array edge; matmul dims should be multiples
+SUBLANES = 8       # vreg sublane count (f32)
+LANES = 128        # vreg lane count
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUSpec:
+    name: str
+    peak_flops_bf16: float      # FLOP/s per chip
+    peak_flops_f32: float
+    hbm_bw: float               # bytes/s per chip
+    hbm_bytes: float            # capacity per chip
+    vmem_bytes: float           # per core
+    smem_bytes: float
+    ici_link_bw: float          # bytes/s per link per direction
+    ici_links: int              # links per chip (2-D torus: 4)
+    grid_step_overhead_s: float # per Pallas grid step (DMA issue + prefetch)
+
+    @property
+    def mxu_dim(self) -> int:
+        return MXU_DIM
+
+
+TPU_V5E = TPUSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    peak_flops_f32=98.5e12,
+    hbm_bw=819e9,
+    hbm_bytes=16 * 2**30,
+    vmem_bytes=16 * 2**20,
+    smem_bytes=1 * 2**20,
+    ici_link_bw=50e9,
+    ici_links=4,
+    grid_step_overhead_s=1.5e-6,
+)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (sparse aggregation).
+
+group_aggregate.py — pl.pallas_call + BlockSpec kernel (C1-C4 fused)
+ops.py             — jit'd public wrappers / padding / dispatch
+ref.py             — pure-jnp oracles (ground truth + XLA baselines)
+"""
+from repro.kernels.ops import DeviceSchedule, aggregate, schedule_to_device
+
+__all__ = ["DeviceSchedule", "aggregate", "schedule_to_device"]

@@ -1,0 +1,144 @@
+"""Group-based neighbor aggregation — the GNNAdvisor kernel, TPU-native.
+
+One `pl.pallas_call` realizes the paper's §5 workload-management stack:
+
+  C1 group partitioning   — operands come pre-grouped from `core.partition`
+                            (fixed (gpt, gs) work tiles, window-homogeneous);
+  C2 leader-node scheme   — consecutive tiles of one node block accumulate
+                            into the same VMEM-resident output block and flush
+                            to HBM exactly once (grid-revisit accumulation:
+                            single writer, no atomics by construction);
+  C3 block-based mapping  — `gpt` groups per grid step; the VMEM working set
+                            (feature window + output block) is the shared-
+                            memory analogue, sized by Eq. 4 re-derived for
+                            16 MiB VMEM;
+  C4 dimension sharing    — the `dt`-wide lane dimension of every block; the
+                            paper's coalesced thread→dim mapping (Fig. 6b) is
+                            lane order on TPU.
+
+The gather itself is a **one-hot matmul against a scalar-prefetch-selected
+feature window** (`src_win` rows) — the MXU-native realization of a sparse
+gather.  Two variants:
+
+  * ``slot_onehot`` — paper-faithful mapping: one one-hot row per neighbor
+    slot ((gpt*gs, src_win) @ (src_win, dt)), i.e. one lane-row per "thread".
+  * ``folded`` — beyond-paper optimization: edge weights and the intra-group
+    sum are folded INTO the gather matrix (W[g, r] = Σ_s ev[g,s]·1[nbr=r]),
+    shrinking the matmul contracting work by gs× ((gpt, src_win) @
+    (src_win, dt)).  Recorded as a §Perf hillclimb step.
+
+Grid = (D/dt, T) with tiles innermost so output/feature block revisits are
+consecutive.  Scalar-prefetched per-tile metadata (`tile_node_block`,
+`tile_window`) drives the BlockSpec index maps — the kernel body never does
+a dynamic HBM load.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["group_aggregate_pallas"]
+
+Variant = Literal["folded", "slot_onehot"]
+
+
+def _kernel(nb_ref, tw_ref,                       # scalar prefetch (SMEM)
+            feat_ref, nbrs_ref, eval_ref, lnode_ref,  # VMEM inputs
+            out_ref,                               # VMEM output block
+            *, gs: int, gpt: int, ont: int, src_win: int, variant: Variant):
+    t = pl.program_id(1)
+
+    # --- leader-node flush boundary: zero the accumulator on first visit ---
+    prev = nb_ref[jnp.maximum(t - 1, 0)]
+    first_visit = jnp.logical_or(t == 0, nb_ref[t] != prev)
+
+    @pl.when(first_visit)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    nbrs = nbrs_ref[0]                              # (gpt, gs) int32, global ids
+    evals = eval_ref[0]                             # (gpt, gs) f32, 0 => padding
+    local = nbrs - tw_ref[t] * src_win              # ids within the window
+    feat = feat_ref[...]                            # (src_win, dt)
+    fdtype = feat.dtype
+
+    if variant == "slot_onehot":
+        # One one-hot row per neighbor slot — the direct image of
+        # "one thread per group element" (paper Fig. 4a).
+        flat = local.reshape(gpt * gs, 1)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (gpt * gs, src_win), 1)
+        onehot = (flat == cols).astype(fdtype)
+        onehot = onehot * evals.reshape(gpt * gs, 1).astype(fdtype)
+        gathered = jnp.dot(onehot, feat, preferred_element_type=jnp.float32)
+        per_group = gathered.reshape(gpt, gs, -1).sum(axis=1)       # (gpt, dt)
+    else:
+        # Folded: W[g, r] = sum_s evals[g, s] * 1[local[g, s] == r];
+        # the intra-group reduction happens inside the gather matrix,
+        # cutting matmul FLOPs by gs (beyond-paper §Perf optimization).
+        cols = jax.lax.broadcasted_iota(jnp.int32, (gpt, src_win), 1)
+        w = jnp.zeros((gpt, src_win), jnp.float32)
+        for s in range(gs):
+            hit = (local[:, s:s + 1] == cols).astype(jnp.float32)
+            w = w + hit * evals[:, s:s + 1]
+        per_group = jnp.dot(w.astype(fdtype), feat,
+                            preferred_element_type=jnp.float32)      # (gpt, dt)
+
+    # --- inter-group scatter within the node block: one-hot matmul on MXU ---
+    rows = jax.lax.broadcasted_iota(jnp.int32, (ont, gpt), 0)
+    ln = lnode_ref[0].reshape(1, gpt)
+    scatter = (rows == ln).astype(jnp.float32)
+    # padded groups carry all-zero evals => per_group row is 0: safe to land on row 0
+    out_ref[...] += jnp.dot(scatter, per_group, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("gs", "gpt", "ont", "src_win", "dt", "out_rows",
+                     "variant", "interpret"),
+)
+def group_aggregate_pallas(feat_padded: jax.Array,
+                           nbrs: jax.Array, edge_val: jax.Array,
+                           local_node: jax.Array,
+                           tile_node_block: jax.Array, tile_window: jax.Array,
+                           *, gs: int, gpt: int, ont: int, src_win: int,
+                           dt: int, out_rows: int,
+                           variant: Variant = "folded",
+                           interpret: bool = False) -> jax.Array:
+    """Run the group-aggregation kernel.
+
+    feat_padded: (N_src_pad, D_pad) with N_src_pad % src_win == 0,
+                 D_pad % dt == 0.  Returns (out_rows, D_pad) float32 where
+                 out_rows % ont == 0.
+    """
+    n_src, d_pad = feat_padded.shape
+    assert n_src % src_win == 0 and d_pad % dt == 0, (n_src, d_pad, src_win, dt)
+    assert out_rows % ont == 0
+    T = nbrs.shape[0]
+    assert nbrs.shape == (T, gpt, gs) and edge_val.shape == (T, gpt, gs)
+    assert local_node.shape == (T, gpt)
+    J = d_pad // dt
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(J, T),
+        in_specs=[
+            pl.BlockSpec((src_win, dt), lambda j, t, nb, tw: (tw[t], j)),
+            pl.BlockSpec((1, gpt, gs), lambda j, t, nb, tw: (t, 0, 0)),
+            pl.BlockSpec((1, gpt, gs), lambda j, t, nb, tw: (t, 0, 0)),
+            pl.BlockSpec((1, gpt), lambda j, t, nb, tw: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((ont, dt), lambda j, t, nb, tw: (nb[t], j)),
+    )
+    kernel = functools.partial(_kernel, gs=gs, gpt=gpt, ont=ont,
+                               src_win=src_win, variant=variant)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((out_rows, d_pad), jnp.float32),
+        interpret=interpret,
+    )(tile_node_block, tile_window, feat_padded, nbrs, edge_val, local_node)

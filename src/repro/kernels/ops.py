@@ -1,0 +1,96 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+`aggregate(...)` is the user-facing entry point: it takes raw node features
+plus a `GroupPartition` schedule, handles all padding, and dispatches to the
+Pallas kernel (TPU) or its pure-XLA fallback.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from typing import TYPE_CHECKING
+
+from repro.kernels import ref as _ref
+from repro.kernels.group_aggregate import group_aggregate_pallas
+
+if TYPE_CHECKING:                      # avoid core<->kernels import cycle
+    from repro.core.partition import GroupPartition
+
+__all__ = ["aggregate", "DeviceSchedule", "schedule_to_device"]
+
+Backend = Literal["pallas", "pallas_interpret", "xla"]
+
+
+class DeviceSchedule:
+    """Device-resident copy of a GroupPartition's arrays + static config."""
+
+    def __init__(self, p: "GroupPartition"):
+        self.nbrs = jnp.asarray(p.nbrs)
+        self.edge_val = jnp.asarray(p.edge_val)
+        self.local_node = jnp.asarray(p.local_node)
+        self.tile_node_block = jnp.asarray(p.tile_node_block)
+        self.tile_window = jnp.asarray(p.tile_window)
+        self.edge_slot = jnp.asarray(p.edge_slot)
+        self.edge_pos = jnp.asarray(p.edge_pos)
+        self.gs, self.gpt, self.ont, self.src_win = p.gs, p.gpt, p.ont, p.src_win
+        self.num_nodes = p.num_nodes
+        self.num_edges = p.num_edges
+        self.padded_src_rows = p.padded_src_rows
+        self.padded_out_rows = p.padded_out_rows
+        self.num_tiles = p.num_tiles
+
+
+def schedule_to_device(p: "GroupPartition") -> DeviceSchedule:
+    return DeviceSchedule(p)
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    r, c = x.shape
+    return jnp.pad(x, ((0, rows - r), (0, cols - c)))
+
+
+def aggregate(feat: jax.Array, sched: DeviceSchedule, *,
+              dt: int = 128, backend: Backend = "pallas_interpret",
+              variant: str = "folded",
+              edge_values: Optional[jax.Array] = None) -> jax.Array:
+    """out[v] = sum over v's neighbor groups of edge_val * feat[nbr].
+
+    edge_values: optional (E,) per-edge weights in ORIGINAL CSR edge order,
+    overriding the schedule's static values — the dynamic-edge-value path
+    GAT-type aggregation needs (weights recomputed every forward).
+    Returns (num_nodes, D) float32.
+    """
+    n, d = feat.shape
+    assert n == sched.num_nodes, (n, sched.num_nodes)
+    if sched.num_tiles == 0:
+        return jnp.zeros((n, d), jnp.float32)
+    if edge_values is not None:
+        T, gpt, gs = sched.edge_val.shape
+        ev = jnp.zeros((T * gpt, gs), jnp.float32).at[
+            sched.edge_slot, sched.edge_pos].set(
+            edge_values.astype(jnp.float32)).reshape(T, gpt, gs)
+    else:
+        ev = sched.edge_val
+    if backend == "xla":
+        out = _ref.group_aggregate_ref(
+            _pad_to(feat, sched.padded_src_rows, d),
+            sched.nbrs, ev, sched.local_node,
+            sched.tile_node_block, sched.ont, sched.padded_out_rows,
+        )
+        return out[:n]
+    dt_eff = min(dt, max(8, d))
+    d_pad = -(-d // dt_eff) * dt_eff
+    feat_p = _pad_to(feat, sched.padded_src_rows, d_pad)
+    out = group_aggregate_pallas(
+        feat_p, sched.nbrs, ev, sched.local_node,
+        sched.tile_node_block, sched.tile_window,
+        gs=sched.gs, gpt=sched.gpt, ont=sched.ont, src_win=sched.src_win,
+        dt=dt_eff, out_rows=sched.padded_out_rows,
+        variant=variant, interpret=(backend == "pallas_interpret"),
+    )
+    return out[:n, :d]

@@ -1,0 +1,10 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve drivers.
+
+NOTE: do not import `repro.launch.dryrun` from library code — it mutates
+XLA_FLAGS at import time by design (the dry-run needs 512 placeholder
+devices before jax initializes).  `mesh`, `dryrun_lib` and `hlo_analysis`
+are import-safe.
+"""
+from repro.launch.mesh import make_mesh, make_production_mesh
+
+__all__ = ["make_mesh", "make_production_mesh"]

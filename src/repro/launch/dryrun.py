@@ -1,0 +1,78 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first initialization).  This module is the multi-pod dry-run entry
+# point: it builds the production meshes from placeholder host devices and
+# lower()+compile()s every (architecture × input-shape) cell — proving the
+# distribution config is coherent without TPU hardware.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b \
+#       --shape train_4k --mesh single
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+#
+# Reports land in experiments/dryrun/<arch>__<shape>__<mesh>.json and feed
+# EXPERIMENTS.md §Dry-run / §Roofline.
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", action="append", default=None,
+                   help="architecture id (repeatable; default: all)")
+    p.add_argument("--shape", action="append", default=None,
+                   help="input shape name (repeatable; default: all)")
+    p.add_argument("--mesh", choices=("single", "multi", "both"),
+                   default="single")
+    p.add_argument("--all", action="store_true",
+                   help="run every (arch x shape) cell")
+    p.add_argument("--out", default="experiments/dryrun")
+    p.add_argument("--n-micro", type=int, default=1)
+    p.add_argument("--save-hlo", action="store_true")
+    p.add_argument("--list", action="store_true")
+    args = p.parse_args(argv)
+
+    import jax
+    from repro.configs import SHAPES, arch_names
+    from repro.launch.dryrun_lib import run_cell
+    from repro.launch.mesh import make_production_mesh
+
+    if args.list:
+        for a in arch_names():
+            print(a)
+        return 0
+
+    archs = args.arch or arch_names()
+    shapes = args.shape or list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    assert len(jax.devices()) >= 512, (
+        "dry-run needs the 512 placeholder devices; do not import jax before "
+        "this module sets XLA_FLAGS")
+
+    failures = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_name = "pod2x16x16" if multi else "pod16x16"
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    run_cell(arch, shape, mesh, mesh_name,
+                             n_micro=args.n_micro, out_dir=args.out,
+                             save_hlo=args.save_hlo)
+                except Exception:
+                    failures.append((arch, shape, mesh_name))
+                    print(f"[dryrun] FAILED {arch} x {shape} x {mesh_name}",
+                          file=sys.stderr)
+                    traceback.print_exc()
+    if failures:
+        print(f"[dryrun] {len(failures)} cell(s) failed: {failures}",
+              file=sys.stderr)
+        return 1
+    print("[dryrun] all requested cells compiled")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,202 @@
+"""Cell-lowering logic for the multi-pod dry-run (no env mutation here —
+`dryrun.py` sets XLA_FLAGS before importing this module).
+
+One *cell* = (architecture × input shape × mesh).  `run_cell` builds the
+abstract parameter/optimizer/cache trees (ShapeDtypeStructs — nothing is
+allocated), lowers + compiles the appropriate step function under the mesh,
+and extracts:
+
+  * memory_analysis()           — proves the per-chip working set fits,
+  * cost_analysis()             — HLO FLOPs / bytes for the roofline,
+  * collective bytes            — parsed from the per-device HLO module,
+  * MODEL_FLOPS = 6·N_active·D  — the usefulness denominator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, cell_is_runnable, get_arch, input_specs
+from repro.hw import TPU_V5E
+from repro.launch.hlo_analysis import (collective_bytes, cost_summary,
+                                       memory_summary, roofline_terms)
+from repro.models.lm import (make_decode_step, make_prefill_step,
+                             make_train_step)
+from repro.nn.transformer import LMConfig, lm_init
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+Pytree = Any
+
+__all__ = ["abstract_params_and_specs", "active_param_fraction",
+           "model_flops", "run_cell", "cell_filename"]
+
+
+def abstract_params_and_specs(cfg: LMConfig):
+    """(ShapeDtypeStruct params, PartitionSpec specs) without allocating."""
+    captured = {}
+
+    def build(key):
+        p, s = lm_init(cfg, key, mode="zeros")
+        captured["specs"] = s          # static: safe to capture while tracing
+        return p
+
+    params_struct = jax.eval_shape(build, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return params_struct, captured["specs"]
+
+
+def _tree_size(tree: Pytree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def active_param_fraction(cfg: LMConfig, params_struct: Pytree) -> dict:
+    """Total vs MoE-active matmul parameters (embedding gather excluded from
+    the 'active' figure; the unembed logits matmul included)."""
+    total = _tree_size(params_struct)
+    embed = (_tree_size(params_struct["embed"]) if "embed" in params_struct
+             else 0)
+    active = 0
+    for slot_p in params_struct["blocks"]:
+        slot_total = _tree_size(slot_p)
+        if cfg.moe is not None and "ffn" in slot_p and "router" in slot_p["ffn"]:
+            expert = _tree_size({k: v for k, v in slot_p["ffn"].items()
+                                 if k in ("wi", "wo")})
+            slot_total -= expert
+            slot_total += expert * cfg.moe.topk // cfg.moe.n_experts
+            slot_total += _tree_size(slot_p["ffn"]["router"])
+        active += slot_total
+    if "unembed" in params_struct:
+        active += _tree_size(params_struct["unembed"])
+    elif cfg.tie_embeddings and embed:
+        active += embed                 # tied table used as the logits matmul
+    return {"total": total, "active_matmul": active, "embed": embed}
+
+
+def model_flops(cfg: LMConfig, params_struct: Pytree, shape_name: str) -> float:
+    """6·N_active·tokens for training, 2·N_active·tokens for inference."""
+    shape = SHAPES[shape_name]
+    counts = active_param_fraction(cfg, params_struct)
+    n_active = counts["active_matmul"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch       # decode: 1 tok/sequence
+
+
+def cell_filename(arch: str, shape: str, mesh_name: str) -> str:
+    return f"{arch}__{shape}__{mesh_name}.json"
+
+
+def run_cell(arch_name: str, shape_name: str, mesh, mesh_name: str, *,
+             n_micro: int = 1, out_dir: Optional[str] = None,
+             save_hlo: bool = False, config_overrides: Optional[dict] = None,
+             use_reduced: bool = False, shape_override=None,
+             verbose: bool = True) -> dict:
+    """Lower + compile one (arch × shape × mesh) cell; return the report.
+
+    use_reduced / shape_override exist for the test suite (smoke-compile the
+    dry-run machinery on small meshes); production cells use the full config
+    and the assigned SHAPES.
+    """
+    arch = get_arch(arch_name)
+    shape = shape_override or SHAPES[shape_name]
+    ok, why = cell_is_runnable(arch, shape_name)
+    report = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+        "mesh_shape": dict(zip(mesh.axis_names, (int(s) for s in mesh.devices.shape))),
+        "num_chips": int(mesh.devices.size),
+        "kind": shape.kind,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+    }
+    if not ok:
+        report["skipped"] = why
+        if out_dir:
+            _save(out_dir, report)
+        return report
+
+    cfg = arch.reduced() if use_reduced else arch.full()
+    if config_overrides:
+        cfg = dataclasses.replace(cfg, **config_overrides)
+    t0 = time.time()
+    params_struct, specs = abstract_params_and_specs(cfg)
+    report["params"] = active_param_fraction(cfg, params_struct)
+    report["model_flops"] = model_flops(cfg, params_struct, shape_name)
+    ins = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt = AdamWConfig()
+        opt_struct = jax.eval_shape(adamw_init, params_struct)
+        fns = make_train_step(cfg, opt, mesh=mesh, n_micro=n_micro,
+                              param_specs=specs, params_shape=params_struct)
+        lowered = fns.step.lower(params_struct, opt_struct, ins["batch"])
+    elif shape.kind == "prefill":
+        fn, _ = make_prefill_step(cfg, mesh=mesh, param_specs=specs,
+                                  params_shape=params_struct)
+        lowered = fn.lower(params_struct, ins["inputs"], ins["pos"])
+    else:
+        fn, _, _ = make_decode_step(cfg, mesh=mesh, param_specs=specs,
+                                    params_shape=params_struct,
+                                    cache_shape=ins["cache"])
+        lowered = fn.lower(params_struct, ins["cache"], ins["tok"], ins["t"])
+    report["lower_s"] = time.time() - t0
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    report["compile_s"] = time.time() - t1
+
+    report["memory"] = memory_summary(compiled)
+    report["cost_builtin"] = cost_summary(compiled)   # while bodies counted 1x
+    hlo = compiled.as_text()
+    from repro.launch.hlo_cost import module_cost
+    loop_cost = module_cost(hlo)
+    report["cost"] = loop_cost.as_dict()              # loop-aware (authoritative)
+    report["collectives"] = {
+        "by_kind": dict(loop_cost.collective_bytes),
+        "counts": dict(loop_cost.collective_counts),
+        "total_bytes": loop_cost.collective_total,
+    }
+    report["hlo_bytes"] = len(hlo)
+    if save_hlo and out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(
+                out_dir, cell_filename(arch_name, shape_name, mesh_name)
+                .replace(".json", ".hlo.txt")), "w") as f:
+            f.write(hlo)
+
+    # roofline: the partitioned module is per-chip already
+    flops = report["cost"]["flops"]
+    bytes_acc = report["cost"]["bytes_accessed"]
+    coll = report["collectives"]["total_bytes"]
+    report["roofline"] = roofline_terms(
+        flops=flops, bytes_accessed=bytes_acc, collective_total_bytes=coll,
+        num_chips=1, hw=TPU_V5E, bf16=True)
+    per_chip_model = report["model_flops"] / report["num_chips"]
+    report["useful_flops_ratio"] = (per_chip_model / flops) if flops else None
+
+    if out_dir:
+        _save(out_dir, report)
+    if verbose:
+        r = report["roofline"]
+        print(f"[dryrun] {arch_name} x {shape_name} x {mesh_name}: "
+              f"compile={report['compile_s']:.1f}s "
+              f"compute={r['t_compute_s']:.4f}s memory={r['t_memory_s']:.4f}s "
+              f"collective={r['t_collective_s']:.4f}s "
+              f"dominant={r['dominant']}")
+    return report
+
+
+def _save(out_dir: str, report: dict):
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, cell_filename(
+        report["arch"], report["shape"], report["mesh"]))
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)

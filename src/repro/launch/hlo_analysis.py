@@ -1,0 +1,139 @@
+"""HLO-level analysis of compiled dry-run artifacts.
+
+`collective_bytes(hlo_text)` sums operand bytes of every cross-device
+collective (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute), per the roofline assignment.  `cost_summary(compiled)`
+extracts FLOPs / bytes from `compiled.cost_analysis()` robustly across
+backends.  `roofline_terms(...)` turns those into the three roofline
+seconds for a given mesh.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+from repro.hw import TPU_V5E, TPUSpec
+
+__all__ = ["DTYPE_BYTES", "parse_shape_bytes", "collective_bytes",
+           "cost_summary", "roofline_terms", "memory_summary"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(DTYPE_BYTES) + r")\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# e.g.  %x = (f32[8]{0}, f32[4]{0}) all-reduce(f32[8] %a, f32[4] %b), ...
+_INSTR_RE = re.compile(
+    r"=\s*(?P<result>.*?)\s*(?P<op>all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start|-done)?\((?P<operands>.*?)\)",
+)
+
+
+def parse_shape_bytes(text: str) -> int:
+    """Sum bytes of every `dtype[dims]` shape literal in `text`."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind and total operand bytes of collective ops in an HLO dump.
+
+    `-done` ops are skipped (the `-start` op carries the transfer) so async
+    pairs aren't double counted.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        # fast reject
+        if not any(k in line for k in _COLLECTIVES):
+            continue
+        if "-done(" in line or "-done.(" in line:
+            continue
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        b = parse_shape_bytes(m.group("operands"))
+        out[op] += b
+        counts[op] += 1
+    total = sum(out.values())
+    return {"by_kind": out, "counts": counts, "total_bytes": total}
+
+
+def cost_summary(compiled) -> dict:
+    """Extract {flops, bytes_accessed, ...} from compiled.cost_analysis()."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:                       # backend without support
+        return {"error": repr(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    if not isinstance(ca, dict):
+        return {"error": f"unexpected cost_analysis type {type(ca)}"}
+    keep = {}
+    for k, v in ca.items():
+        if k in ("flops", "transcendentals", "bytes accessed",
+                 "bytes accessed output", "optimal_seconds") or \
+                k.startswith("bytes accessed"):
+            keep[k.replace(" ", "_")] = float(v)
+    return keep
+
+
+def memory_summary(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:
+        return {"error": repr(e)}
+    if ma is None:
+        return {"unavailable": True}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        if hasattr(ma, attr):
+            out[attr] = int(getattr(ma, attr))
+    if not out:
+        out["repr"] = repr(ma)
+    return out
+
+
+def roofline_terms(*, flops: float, bytes_accessed: float,
+                   collective_total_bytes: float, num_chips: int,
+                   hw: TPUSpec = TPU_V5E, bf16: bool = True) -> dict:
+    """The three roofline terms in seconds (per assignment):
+
+      compute    = HLO_FLOPs / (chips * peak)
+      memory     = HLO_bytes / (chips * hbm_bw)
+      collective = collective_bytes / (chips * link_bw)
+
+    HLO figures from the SPMD-partitioned module are *per-chip* already;
+    cost_analysis on a partitioned module reports the per-partition program,
+    so we do NOT divide by chips again for those — the caller passes
+    per-chip numbers and chips=1, or whole-model numbers and chips=N.
+    """
+    peak = hw.peak_flops_bf16 if bf16 else hw.peak_flops_f32
+    t_compute = flops / (num_chips * peak)
+    t_memory = bytes_accessed / (num_chips * hw.hbm_bw)
+    t_collective = collective_total_bytes / (num_chips * hw.ici_link_bw)
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_collective)), key=lambda kv: kv[1])[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "bound_s": max(t_compute, t_memory, t_collective),
+    }

@@ -1,0 +1,86 @@
+"""Serving driver: batched greedy decoding with a KV/SSM cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmoe-1b-7b \
+        --batch 4 --prompt-len 16 --gen-len 32
+
+Decodes from step 0 (prompt tokens are fed through the same decode step —
+cache-building prefill-by-decode), so the one code path covers pure-SSM,
+hybrid, SWA and global-attention archs uniformly.  The production serve
+path for long prompts is `make_prefill_step` (lowered by the prefill_32k
+dry-run cells).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--reduced", action="store_true", default=True)
+    p.add_argument("--full", dest="reduced", action="store_false")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--gen-len", type=int, default=32)
+    p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_arch
+    from repro.models.lm import make_decode_step
+    from repro.nn.transformer import init_lm_cache, lm_init
+
+    arch = get_arch(args.arch)
+    cfg = arch.reduced() if args.reduced else arch.full()
+    params, _ = lm_init(cfg, jax.random.PRNGKey(args.seed))
+    max_seq = args.prompt_len + args.gen_len
+    cache = init_lm_cache(cfg, args.batch, max_seq=max_seq,
+                          dtype=jnp.float32 if cfg.dtype == jnp.float32
+                          else jnp.bfloat16)
+    decode, _, _ = make_decode_step(cfg)
+
+    rng = np.random.default_rng(args.seed)
+    if cfg.frontend == "tokens":
+        prompt = rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len))
+        feed = lambda t, prev: (jnp.asarray(prompt[:, t], jnp.int32)
+                                if t < args.prompt_len else prev)
+    else:
+        frames = rng.standard_normal((args.batch, args.prompt_len,
+                                      cfg.d_model)).astype(np.float32)
+        # embeds frontend: generated ids are re-embedded with a fixed random
+        # codebook (stub for the real modality decoder loop)
+        codebook = rng.standard_normal((cfg.vocab, cfg.d_model)).astype(np.float32)
+        feed = lambda t, prev: (jnp.asarray(frames[:, t])
+                                if t < args.prompt_len
+                                else jnp.asarray(codebook)[prev])
+
+    key = jax.random.PRNGKey(args.seed + 1)
+    out_tokens = []
+    prev = jnp.zeros((args.batch,), jnp.int32)
+    t0 = time.time()
+    for t in range(max_seq):
+        logits, cache = decode(params, cache, feed(t, prev), jnp.int32(t))
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            prev = jax.random.categorical(sub, logits / args.temperature, axis=-1)
+        else:
+            prev = logits.argmax(-1).astype(jnp.int32)
+        if t >= args.prompt_len - 1:
+            out_tokens.append(np.asarray(prev))
+    dt = time.time() - t0
+    gen = np.stack(out_tokens[: args.gen_len], axis=1)
+    tps = args.batch * max_seq / dt
+    print(f"[serve] arch={cfg.name} batch={args.batch} steps={max_seq} "
+          f"tok/s={tps:.1f}")
+    for b in range(min(args.batch, 2)):
+        print(f"  seq[{b}]: {gen[b][:16].tolist()} ...")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,9 @@
+"""Model assembly: GNN (paper benchmarks) + LM family builders and step factories."""
+from repro.models.gnn import GNNConfig, GNNModel, build_gnn, gcn_edge_values
+from repro.models.lm import (LMModel, make_decode_step, make_prefill_step,
+                             make_train_step)
+
+__all__ = [
+    "GNNConfig", "GNNModel", "build_gnn", "gcn_edge_values",
+    "LMModel", "make_decode_step", "make_prefill_step", "make_train_step",
+]

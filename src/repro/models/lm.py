@@ -1,0 +1,215 @@
+"""LM model-level API: parameter init with shardings, and the train / prefill
+/ decode step factories that launch/dryrun/train/serve all consume.
+
+The factories return *pure* jittable functions plus the in/out sharding
+pytrees, so the same function serves:
+  * 1-device smoke tests (mesh=None, shardings ignored),
+  * the 256-chip single-pod dry-run,
+  * the 512-chip multi-pod dry-run,
+  * a real cluster launch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.accumulate import accumulate_gradients
+from repro.distributed.sharding import (batch_axes_for, constrain,
+                                        named_shardings, prune_specs_for_mesh,
+                                        valid_spec)
+from repro.nn.layers import DEFAULT_RULES, ShardingRules
+from repro.nn.transformer import (LMConfig, init_lm_cache, lm_decode_step,
+                                  lm_forward, lm_init, lm_loss, lm_prefill,
+                                  param_count)
+from repro.optim.adamw import AdamWConfig, OptState, adamw_init, adamw_update
+
+Pytree = Any
+
+__all__ = ["LMModel", "TrainStepFns", "make_train_step", "make_prefill_step",
+           "make_decode_step"]
+
+
+@dataclasses.dataclass
+class LMModel:
+    """Config + params + specs bundle."""
+
+    cfg: LMConfig
+    params: Pytree
+    specs: Pytree
+
+    @classmethod
+    def create(cls, cfg: LMConfig, key: jax.Array, *,
+               rules: ShardingRules = DEFAULT_RULES, mode: str = "normal"):
+        params, specs = lm_init(cfg, key, rules=rules, mode=mode)
+        return cls(cfg=cfg, params=params, specs=specs)
+
+    @property
+    def n_params(self) -> int:
+        return param_count(self.params)
+
+    def abstract(self):
+        """ShapeDtypeStruct view (for dry-run without allocation)."""
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.params)
+
+
+@dataclasses.dataclass
+class TrainStepFns:
+    step: Any                 # (params, opt_state, batch) -> (params, opt, metrics)
+    in_shardings: Any
+    out_shardings: Any
+    batch_spec: Any
+
+
+def _batch_specs(cfg: LMConfig, mesh: Optional[Mesh]) -> dict:
+    """PartitionSpecs for the training batch dict."""
+    if mesh is None:
+        return {}
+    b = batch_axes_for(mesh)
+    specs = {"labels": P(b, None), "pos": P(b, None)}
+    if cfg.rope == "mrope":
+        specs["pos"] = P(b, None, None)
+    if cfg.frontend == "tokens":
+        specs["tokens"] = P(b, None)
+    else:
+        specs["embeds"] = P(b, None, None)
+    return specs
+
+
+def make_train_step(cfg: LMConfig, opt: AdamWConfig, *,
+                    mesh: Optional[Mesh] = None, n_micro: int = 1,
+                    param_specs: Optional[Pytree] = None,
+                    params_shape: Optional[Pytree] = None,
+                    donate: bool = True):
+    """Build the jitted train step.
+
+    Returns TrainStepFns; when mesh is given, in/out shardings are concrete
+    NamedShardings (params FSDP/TP per specs, optimizer state mirroring
+    params, batch over (pod,data)).
+    """
+
+    def loss_fn(params, mb):
+        return lm_loss(params, cfg, mb, mesh=mesh)
+
+    def step(params, opt_state, batch):
+        if mesh is not None:
+            bspecs = _batch_specs(cfg, mesh)
+            batch = {k: constrain(v, mesh, bspecs[k]) for k, v in batch.items()}
+        grads, loss, metrics = accumulate_gradients(loss_fn, params, batch,
+                                                    n_micro)
+        new_params, new_opt, opt_metrics = adamw_update(opt, grads, opt_state,
+                                                        params)
+        metrics = dict(metrics, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    if mesh is None:
+        return TrainStepFns(step=jax.jit(step, donate_argnums=(0, 1) if donate else ()),
+                            in_shardings=None, out_shardings=None,
+                            batch_spec=None)
+
+    assert param_specs is not None and params_shape is not None
+    pspecs = prune_specs_for_mesh(mesh, param_specs, params_shape)
+    p_shard = jax.tree.map(lambda sp: NamedSharding(mesh, sp), pspecs,
+                           is_leaf=lambda x: isinstance(x, P))
+    # optimizer state sharding mirrors params; step counter replicated
+    opt_shard = OptState(step=NamedSharding(mesh, P()), m=p_shard, v=p_shard)
+    bspecs = _batch_specs(cfg, mesh)
+    b_shard = {k: NamedSharding(mesh, v) for k, v in bspecs.items()}
+    metrics_shard = None  # let XLA pick (scalars)
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_shard, opt_shard, b_shard),
+        out_shardings=(p_shard, opt_shard, metrics_shard),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return TrainStepFns(step=jitted, in_shardings=(p_shard, opt_shard, b_shard),
+                        out_shardings=(p_shard, opt_shard, None),
+                        batch_spec=bspecs)
+
+
+def make_prefill_step(cfg: LMConfig, *, mesh: Optional[Mesh] = None,
+                      param_specs: Optional[Pytree] = None,
+                      params_shape: Optional[Pytree] = None):
+    """Prefill: (params, inputs, pos) -> (last-token logits, stacked KV)."""
+
+    def prefill(params, inputs, pos):
+        if mesh is not None:
+            b = batch_axes_for(mesh)
+            inputs = constrain(inputs, mesh,
+                               P(b, None) if cfg.frontend == "tokens"
+                               else P(b, None, None))
+        return lm_prefill(params, cfg, inputs, pos, mesh=mesh)
+
+    if mesh is None:
+        return jax.jit(prefill), None
+    pspecs = prune_specs_for_mesh(mesh, param_specs, params_shape)
+    p_shard = jax.tree.map(lambda sp: NamedSharding(mesh, sp), pspecs,
+                           is_leaf=lambda x: isinstance(x, P))
+    return jax.jit(prefill, in_shardings=(p_shard, None, None)), p_shard
+
+
+def decode_cache_specs(cfg: LMConfig, mesh: Mesh, cache_shape: Pytree,
+                       *, model_axis: str = "model") -> Pytree:
+    """KV-cache PartitionSpecs: batch over (pod,data); kv-heads over `model`
+    when divisible, else cache sequence over `model` (sequence-sharded KV).
+
+    attention slot leaves: (R, B, S, K, hd); mamba h: (R, B, d_inner, N);
+    mamba conv: (R, B, d_conv-1, d_inner)."""
+    b = batch_axes_for(mesh)
+    tp = mesh.shape[model_axis] if model_axis in mesh.axis_names else 1
+
+    def spec_for(leaf):
+        shape = leaf.shape
+        if len(shape) == 5:                      # attention KV (R,B,S,K,hd)
+            if cfg.n_kv % tp == 0 and tp > 1:
+                return P(None, b, None, model_axis, None)
+            if shape[2] % tp == 0 and tp > 1:
+                return P(None, b, model_axis, None, None)
+            return P(None, b, None, None, None)
+        if len(shape) == 4 and cfg.mamba is not None and \
+                shape[2] == cfg.mamba.d_conv - 1:  # (R,B,dc-1,di)
+            return P(None, b, None, model_axis)
+        if len(shape) == 4:                      # mamba h (R,B,di,N)
+            return P(None, b, model_axis, None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree.map(spec_for, cache_shape)
+
+
+def make_decode_step(cfg: LMConfig, *, mesh: Optional[Mesh] = None,
+                     param_specs: Optional[Pytree] = None,
+                     params_shape: Optional[Pytree] = None,
+                     cache_shape: Optional[Pytree] = None,
+                     donate_cache: bool = True):
+    """Decode: (params, cache, token_or_embed, t) -> (logits, new_cache)."""
+
+    def decode(params, cache, tok, t):
+        return lm_decode_step(params, cfg, cache, tok, t)
+
+    if mesh is None:
+        return (jax.jit(decode, donate_argnums=(1,) if donate_cache else ()),
+                None, None)
+    pspecs = prune_specs_for_mesh(mesh, param_specs, params_shape)
+    p_shard = jax.tree.map(lambda sp: NamedSharding(mesh, sp), pspecs,
+                           is_leaf=lambda x: isinstance(x, P))
+    cspecs = decode_cache_specs(cfg, mesh, cache_shape)
+    cspecs = prune_specs_for_mesh(mesh, cspecs, cache_shape)
+    c_shard = jax.tree.map(lambda sp: NamedSharding(mesh, sp), cspecs,
+                           is_leaf=lambda x: isinstance(x, P))
+    b = batch_axes_for(mesh)
+    # infer the token batch size from the cache (dim 1 of any attn/ssm leaf)
+    tok_batch = jax.tree_util.tree_leaves(cache_shape)[0].shape[1]
+    tok_p = P(b) if cfg.frontend == "tokens" else P(b, None)
+    tok_shape = (tok_batch,) if cfg.frontend == "tokens" else (tok_batch,
+                                                               cfg.d_model)
+    tok_spec = NamedSharding(mesh, valid_spec(mesh, tok_p, tok_shape))
+    jitted = jax.jit(decode,
+                     in_shardings=(p_shard, c_shard, tok_spec, None),
+                     out_shardings=(None, c_shard),
+                     donate_argnums=(1,) if donate_cache else ())
+    return jitted, p_shard, c_shard

@@ -1,0 +1,10 @@
+"""Pure-JAX NN substrate (no flax): layers, attention, MoE, Mamba, LM blocks.
+
+Every init function returns a `(params, specs)` pair of identical pytree
+structure; `specs` leaves are `jax.sharding.PartitionSpec` built from the
+active `ShardingRules`, so the same model definition serves 1-device smoke
+tests and the 512-chip dry-run unchanged.
+"""
+from repro.nn.layers import ShardingRules, DEFAULT_RULES, Initializer
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "Initializer"]

@@ -1,0 +1,404 @@
+"""Attention substrate: GQA + RoPE/M-RoPE + blockwise causal + SWA + decode.
+
+Design notes (these choices are what make the 40-cell dry-run fit memory):
+
+* Training/prefill attention is *blockwise* (flash-attention algorithm
+  expressed in XLA ops): an outer scan over query chunks and an inner scan
+  over KV chunks with an online-softmax carry.  Peak live memory per step is
+  O(q_chunk * kv_chunk) instead of O(S^2).
+* Sliding-window layers slice a static-width KV band per query chunk
+  (`dynamic_slice`), so HLO FLOPs scale with S*W, not S^2 — the roofline
+  sees the real SWA saving.
+* `causal_mode="masked_full"` computes the full block grid with masking
+  (2x causal FLOP waste — the honest baseline); `"triangle"` uses a
+  tournament pairing of query chunks so only the causal half is computed
+  (§Perf hillclimb optimization).
+* Decode attends a (B, K, S, hd) cache in one einsum; SWA layers keep a
+  ring-buffer cache of width W so long-context decode memory is O(W).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import Initializer
+
+__all__ = ["AttnParams", "attention_init", "rope", "m_rope",
+           "blockwise_attention", "decode_attention", "attention_forward",
+           "attention_decode", "init_cache"]
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def _rope_angles(pos: jax.Array, head_dim: int, theta: float) -> jax.Array:
+    """pos (...,) -> angles (..., head_dim//2) in float32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    return pos[..., None].astype(jnp.float32) * freq
+
+
+def rope(x: jax.Array, pos: jax.Array, *, theta: float = 10000.0) -> jax.Array:
+    """x (B, S, H, hd), pos (B, S) -> rotated x (same dtype)."""
+    ang = _rope_angles(pos, x.shape[-1], theta)          # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def m_rope(x: jax.Array, pos3: jax.Array, sections: tuple[int, ...],
+           *, theta: float = 10000.0) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL §3): head_dim/2 split into (t, h, w) sections.
+
+    x (B, S, H, hd); pos3 (B, 3, S) — temporal/height/width position ids.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # pick which of the 3 position streams drives each frequency index
+    # (static: computed with numpy at trace time)
+    import numpy as _np
+    sec_id = jnp.asarray(_np.repeat(_np.arange(3), _np.asarray(sections)))  # (half,)
+    pos = jnp.take_along_axis(
+        pos3.astype(jnp.float32), sec_id[None, :, None].repeat(pos3.shape[0], 0), axis=1
+    )  # hack-free gather: (B, half, S)
+    ang = pos.transpose(0, 2, 1) * freq[None, None, :]                  # (B, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnParams:
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    rope: str = "rope"            # "rope" | "mrope" | "none"
+    rope_theta: float = 10000.0
+    mrope_sections: tuple = (16, 24, 24)
+    window: Optional[int] = None  # sliding window (tokens), None = global
+    softcap: Optional[float] = None
+    qk_norm: bool = False
+    bias: bool = False
+    query_scale: Optional[float] = None  # default 1/sqrt(head_dim)
+    # fuse wq/wk/wv into one (d, (H+2K)*hd) projection: ONE backward dx
+    # all-reduce instead of three (§Perf iteration 7: the dominant gemma2-9b
+    # collective is the per-dot dx AR in the remat'd backward)
+    fused_qkv: bool = True
+
+
+def attention_init(init: Initializer, d_model: int, ap: AttnParams):
+    H, K, hd = ap.n_heads, ap.n_kv, ap.head_dim
+    p, s = {}, {}
+    if ap.fused_qkv:
+        p["wqkv"], s["wqkv"] = init.weight((d_model, H + 2 * K, hd),
+                                           ("embed", "heads", "head_dim"))
+    else:
+        p["wq"], s["wq"] = init.weight((d_model, H, hd), ("embed", "heads", "head_dim"))
+        p["wk"], s["wk"] = init.weight((d_model, K, hd), ("embed", "kv_heads", "head_dim"))
+        p["wv"], s["wv"] = init.weight((d_model, K, hd), ("embed", "kv_heads", "head_dim"))
+    p["wo"], s["wo"] = init.weight((H, hd, d_model), ("heads", "head_dim", "embed"))
+    if ap.bias:
+        for n, shape, ax in [("bq", (H, hd), ("heads", "head_dim")),
+                             ("bk", (K, hd), ("kv_heads", "head_dim")),
+                             ("bv", (K, hd), ("kv_heads", "head_dim")),
+                             ("bo", (d_model,), ("embed",))]:
+            p[n], s[n] = init.weight(shape, ax, zero=True)
+    if ap.qk_norm:
+        p["qnorm"], s["qnorm"] = init.weight((hd,), ("head_dim",), zero=True)
+        p["knorm"], s["knorm"] = init.weight((hd,), ("head_dim",), zero=True)
+    return p, s
+
+
+def _qkv(p, ap: AttnParams, x: jax.Array):
+    if ap.fused_qkv:
+        H, K = ap.n_heads, ap.n_kv
+        qkv = jnp.einsum("bsd,dhk->bshk", x, p["wqkv"].astype(x.dtype))
+        q, k, v = (qkv[:, :, :H], qkv[:, :, H:H + K], qkv[:, :, H + K:])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if ap.bias:
+        q, k, v = q + p["bq"].astype(x.dtype), k + p["bk"].astype(x.dtype), v + p["bv"].astype(x.dtype)
+    if ap.qk_norm:
+        q = _head_rms(q, p["qnorm"])
+        k = _head_rms(k, p["knorm"])
+    return q, k, v
+
+
+def _head_rms(x: jax.Array, g: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * (1.0 + g.astype(jnp.float32))).astype(x.dtype)
+
+
+def _apply_rope(ap: AttnParams, q, k, pos):
+    if ap.rope == "rope":
+        return rope(q, pos, theta=ap.rope_theta), rope(k, pos, theta=ap.rope_theta)
+    if ap.rope == "mrope":
+        return (m_rope(q, pos, ap.mrope_sections, theta=ap.rope_theta),
+                m_rope(k, pos, ap.mrope_sections, theta=ap.rope_theta))
+    return q, k
+
+
+# ---------------------------------------------------------------------------
+# blockwise causal attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_attn(q, k, v, qpos, kpos, *, scale, softcap, window):
+    """One (qc, kc) tile: returns (out_unnorm, row_max, row_denom).
+
+    q (B, qc, H, hd); k, v (B, kc, H, hd) — kv already head-repeated.
+    """
+    logits = jnp.einsum("bqhd,bchd->bhqc", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    mask = kpos[None, None, None, :] <= qpos[None, None, :, None]
+    if window is not None:
+        mask &= kpos[None, None, None, :] > (qpos[None, None, :, None] - window)
+    logits = jnp.where(mask, logits, -1e30)
+    m = logits.max(axis=-1)                                   # (b, h, qc)
+    p = jnp.exp(logits - m[..., None])
+    p = jnp.where(mask, p, 0.0)
+    denom = p.sum(axis=-1)
+    out = jnp.einsum("bhqc,bchd->bqhd", p, v.astype(jnp.float32))
+    return out, m, denom
+
+
+def _merge(acc, new):
+    """Online-softmax merge of two partial attention results."""
+    out0, m0, d0 = acc
+    out1, m1, d1 = new
+    m = jnp.maximum(m0, m1)
+    a0, a1 = jnp.exp(m0 - m), jnp.exp(m1 - m)
+    out = out0 * a0.transpose(0, 2, 1)[..., None] + out1 * a1.transpose(0, 2, 1)[..., None]
+    return out, m, d0 * a0 + d1 * a1
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, kh, hd = k.shape
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def blockwise_attention(q, k, v, *, q_pos, kv_pos, window=None, softcap=None,
+                        scale=None, q_chunk: int = 512, kv_chunk: int = 512,
+                        causal_mode: str = "flash") -> jax.Array:
+    """q (B,S,H,hd), k/v (B,S,K,hd) -> (B,S,H,hd) float32.
+
+    q_pos/kv_pos: (S,) absolute positions (causality = kv_pos <= q_pos).
+
+    causal_mode:
+      "flash"       — custom-VJP flash path (O(S) memory fwd+bwd); default.
+      "masked_full" — plain scan with XLA autodiff (memory-heavy backward;
+                      kept as the measured §Perf baseline and as a test
+                      oracle).
+      "triangle"    — tournament pairing computing only the causal half;
+                      FLOP-optimal for inference prefill (no custom bwd).
+    """
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    n_rep = H // K
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    if causal_mode == "flash":
+        from repro.nn.flash import flash_attention
+        return flash_attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                               scale=scale, softcap=softcap, window=window,
+                               q_chunk=q_chunk, kv_chunk=kv_chunk)
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, S)
+    nq, nk = S // qc, S // kc
+    assert S % qc == 0 and S % kc == 0, (S, qc, kc)
+
+    qr = q.reshape(B, nq, qc, H, hd)
+    qpr = q_pos.reshape(nq, qc)
+
+    if window is not None:
+        # banded: static-width KV slice per query chunk
+        band = (-(-(window + qc) // kc) + 1) * kc
+        band = min(band, S)
+
+        def per_q(qi):
+            qb = qr[:, qi]
+            qp = qpr[qi]
+            start = jnp.clip(qi * qc + qc - band, 0, S - band)
+            kb = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(kv_pos, start, band, axis=0)
+            out, m, d = _block_attn(qb, kb, vb, qp, kp, scale=scale,
+                                    softcap=softcap, window=window)
+            return out / jnp.maximum(d, 1e-30).transpose(0, 2, 1)[..., None]
+
+        outs = jax.lax.map(per_q, jnp.arange(nq))           # (nq, B, qc, H, hd)
+        return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+    kr = k.reshape(B, nk, kc, H, hd)
+    vr = v.reshape(B, nk, kc, H, hd)
+    kpr = kv_pos.reshape(nk, kc)
+
+    def q_row(qi):
+        qb, qp = qr[:, qi], qpr[qi]
+
+        def kv_step(acc, ki):
+            out, m, d = _block_attn(qb, kr[:, ki], vr[:, ki], qp, kpr[ki],
+                                    scale=scale, softcap=softcap, window=None)
+            return _merge(acc, (out, m, d)), None
+
+        init = (jnp.zeros((B, qc, H, hd), jnp.float32),
+                jnp.full((B, H, qc), -1e30, jnp.float32),
+                jnp.zeros((B, H, qc), jnp.float32))
+        (out, m, d), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        return out / jnp.maximum(d, 1e-30).transpose(0, 2, 1)[..., None]
+
+    if causal_mode == "triangle" and nq == nk and nq >= 2:
+        return _triangle_attention(qr, kr, vr, qpr, kpr, scale=scale,
+                                   softcap=softcap).reshape(B, S, H, hd)
+    outs = jax.lax.map(q_row, jnp.arange(nq))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def _triangle_attention(qr, kr, vr, qpr, kpr, *, scale, softcap):
+    """Causal-half-only block iteration via tournament pairing.
+
+    Pairs query chunk i with query chunk nq-1-i: row i needs chunks 0..i,
+    row nq-1-i needs 0..nq-1-i; together exactly nq+1 block computations —
+    constant per pair, so the scan is static and total work is the causal
+    half (+diagonal), eliminating the 2x masked-full waste.
+    """
+    B, nq, qc, H, hd = qr.shape
+    _ = kpr  # positions per kv chunk
+
+    def do_row(qi, nk_eff):
+        # process row qi over kv chunks [0, nk_eff) then normalize; chunks
+        # beyond nk_eff-1 are skipped by masking the *scan input* length via
+        # a where on the merged result (static bound = nq).
+        qb, qp = qr[:, qi], qpr[qi]
+
+        def kv_step(acc, ki):
+            out, m, d = _block_attn(qb, kr[:, ki], vr[:, ki], qp, kpr[ki],
+                                    scale=scale, softcap=softcap, window=None)
+            live = ki < nk_eff
+            new = (jnp.where(live, out, 0.0),
+                   jnp.where(live, m, -1e30),
+                   jnp.where(live, d, 0.0))
+            return _merge(acc, new), None
+
+        init = (jnp.zeros((B, qc, H, hd), jnp.float32),
+                jnp.full((B, H, qc), -1e30, jnp.float32),
+                jnp.zeros((B, H, qc), jnp.float32))
+        (out, m, d), _ = jax.lax.scan(kv_step, init, jnp.arange(nq))
+        return out / jnp.maximum(d, 1e-30).transpose(0, 2, 1)[..., None]
+
+    half = (nq + 1) // 2
+
+    def pair_step(i):
+        lo = do_row(i, i + 1)
+        hi = do_row(nq - 1 - i, nq - i)
+        return lo, hi
+
+    los, his = jax.lax.map(pair_step, jnp.arange(half))
+    # stitch: row i from los[i], row nq-1-i from his[i]
+    out = jnp.zeros((nq, B, qc, H, hd), los.dtype)
+    out = out.at[jnp.arange(half)].set(los)
+    out = out.at[nq - 1 - jnp.arange(half)].set(his)
+    return out.transpose(1, 0, 2, 3, 4)
+
+
+# ---------------------------------------------------------------------------
+# decode attention over a KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(batch: int, ap: AttnParams, max_seq: int, dtype=jnp.bfloat16):
+    """Cache pytree for one attention layer. SWA layers use a ring buffer."""
+    S = min(ap.window, max_seq) if ap.window is not None else max_seq
+    shape = (batch, S, ap.n_kv, ap.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(q, cache_k, cache_v, kv_pos, q_pos, *, scale,
+                     softcap=None, window=None) -> jax.Array:
+    """q (B, 1, H, hd); cache_k/v (B, Sc, K, hd); kv_pos (Sc,) absolute
+    positions of cache entries (-1 = empty slot). Returns (B, 1, H, hd) f32."""
+    B, _, H, hd = q.shape
+    K = cache_k.shape[2]
+    n_rep = H // K
+    qf = q.astype(jnp.float32).reshape(B, H, hd)
+    kf = cache_k.astype(jnp.float32)
+    # group query heads by their kv head: no KV repeat needed at decode
+    qg = qf.reshape(B, K, n_rep, hd)
+    logits = jnp.einsum("bkrd,bskd->bkrs", qg, kf) * scale      # (B,K,rep,Sc)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    valid = (kv_pos >= 0) & (kv_pos <= q_pos)
+    if window is not None:
+        valid &= kv_pos > (q_pos - window)
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrs,bskd->bkrd", p, cache_v.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# full attention layer forward (train/prefill) and decode step
+# ---------------------------------------------------------------------------
+
+def attention_forward(p, ap: AttnParams, x: jax.Array, pos, *,
+                      q_chunk=512, kv_chunk=512, causal_mode="masked_full",
+                      return_kv: bool = False):
+    """x (B,S,d); pos: (B,S) int32 (or (B,3,S) for mrope)."""
+    q, k, v = _qkv(p, ap, x)
+    q, k = _apply_rope(ap, q, k, pos)
+    scale = ap.query_scale if ap.query_scale is not None else 1.0 / math.sqrt(ap.head_dim)
+    pos1d = pos[0] if ap.rope != "mrope" else pos[0, 0]
+    out = blockwise_attention(q, k, v, q_pos=pos1d, kv_pos=pos1d,
+                              window=ap.window, softcap=ap.softcap, scale=scale,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk,
+                              causal_mode=causal_mode)
+    y = jnp.einsum("bshd,hdm->bsm", out.astype(x.dtype), p["wo"].astype(x.dtype))
+    if ap.bias:
+        y = y + p["bo"].astype(x.dtype)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attention_decode(p, ap: AttnParams, x: jax.Array, cache: dict,
+                     t: jax.Array, pos):
+    """One decode step. x (B,1,d); t scalar int32 current position;
+    pos: (B,1) int (or (B,3,1) mrope). Returns (y, new_cache)."""
+    q, k, v = _qkv(p, ap, x)
+    q, k = _apply_rope(ap, q, k, pos)
+    Sc = cache["k"].shape[1]
+    slot = t % Sc if ap.window is not None else t
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    if ap.window is not None:
+        # ring buffer: absolute position of slot s given write head t
+        idx = jnp.arange(Sc)
+        kv_pos = t - ((t % Sc) - idx) % Sc
+        kv_pos = jnp.where(kv_pos > t, kv_pos - Sc, kv_pos)
+        kv_pos = jnp.where(kv_pos < 0, -1, kv_pos)
+    else:
+        kv_pos = jnp.where(jnp.arange(Sc) <= t, jnp.arange(Sc), -1)
+    scale = ap.query_scale if ap.query_scale is not None else 1.0 / math.sqrt(ap.head_dim)
+    out = decode_attention(q, ck, cv, kv_pos, t, scale=scale,
+                           softcap=ap.softcap, window=ap.window)
+    y = jnp.einsum("bshd,hdm->bsm", out.astype(x.dtype), p["wo"].astype(x.dtype))
+    if ap.bias:
+        y = y + p["bo"].astype(x.dtype)
+    return y, {"k": ck, "v": cv}

@@ -1,0 +1,208 @@
+"""Flash attention in pure JAX (custom VJP): O(S) live memory fwd AND bwd.
+
+Why: differentiating a scan-of-blocks attention makes XLA save every
+block's logits/probability matrices and position masks as scan residuals —
+for a 24-layer 4k-seq model that is tens of GB per chip (measured: 44 GB
+temp for h2o-danube train_4k; see EXPERIMENTS.md §Perf iteration 1).  The
+flash backward recomputes p per block from the saved (out, lse) statistics,
+so residuals are just q, k, v, out, lse — the standard FlashAttention-2
+recipe expressed in lax.scan instead of CUDA.
+
+Supports: causal masking from absolute positions, sliding windows (banded
+forward — FLOPs scale with S·W), tanh logit softcap (gemma2) with the exact
+chain rule in backward, GQA via pre-repeated heads.
+
+TPU mapping note: this module is the XLA-level expression of the algorithm;
+block sizes (q_chunk, kv_chunk) play the BlockSpec role — (512, 512) tiles
+keep the (qc, kc) score matrix and the (qc|kc, hd) operands inside VMEM-scale
+working sets with lane-aligned last dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FlashCfg", "flash_attention"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashCfg:
+    scale: float
+    softcap: Optional[float]
+    window: Optional[int]
+    qc: int
+    kc: int
+
+
+def _scores(cfg: FlashCfg, qb, kb, qp, kp):
+    """(B,qc,H,hd) x (B,kc,H,hd) -> (capped logits (B,H,qc,kc), mask)."""
+    raw = jnp.einsum("bqhd,bchd->bhqc", qb.astype(jnp.float32),
+                     kb.astype(jnp.float32)) * cfg.scale
+    if cfg.softcap is not None:
+        raw = cfg.softcap * jnp.tanh(raw / cfg.softcap)
+    mask = kp[None, None, None, :] <= qp[None, None, :, None]
+    if cfg.window is not None:
+        mask &= kp[None, None, None, :] > (qp[None, None, :, None] - cfg.window)
+    return raw, mask
+
+
+def _fwd_row(cfg: FlashCfg, qb, qp, kr, vr, kpr):
+    """One query row against all kv chunks. kr/vr (nk,B,kc,H,hd); kpr (nk,kc).
+    Returns (out (B,qc,H,hd) f32 normalized, lse (B,H,qc))."""
+    B, qc, H, hd = qb.shape
+
+    def step(acc, kv):
+        kb, vb, kp = kv
+        logits, mask = _scores(cfg, qb, kb, qp, kp)
+        logits = jnp.where(mask, logits, -1e30)
+        m_new = jnp.maximum(acc[1], logits.max(-1))
+        p = jnp.where(mask, jnp.exp(logits - m_new[..., None]), 0.0)
+        alpha = jnp.exp(acc[1] - m_new)
+        out = (acc[0] * alpha.transpose(0, 2, 1)[..., None]
+               + jnp.einsum("bhqc,bchd->bqhd", p, vb.astype(jnp.float32)))
+        d = acc[2] * alpha + p.sum(-1)
+        return (out, m_new, d), None
+
+    init = (jnp.zeros((B, qc, H, hd), jnp.float32),
+            jnp.full((B, H, qc), -1e30, jnp.float32),
+            jnp.zeros((B, H, qc), jnp.float32))
+    (out, m, d), _ = jax.lax.scan(step, init, (kr, vr, kpr))
+    d_safe = jnp.maximum(d, 1e-30)
+    out = out / d_safe.transpose(0, 2, 1)[..., None]
+    lse = m + jnp.log(d_safe)
+    return out, lse
+
+
+def _fwd_impl(cfg: FlashCfg, q, k, v, q_pos, kv_pos):
+    B, S, H, hd = q.shape
+    qc, kc = min(cfg.qc, S), min(cfg.kc, S)
+    assert S % qc == 0 and S % kc == 0, (S, qc, kc)
+    nq, nk = S // qc, S // kc
+    qr = q.reshape(B, nq, qc, H, hd)
+    qpr = q_pos.reshape(nq, qc)
+
+    if cfg.window is not None and cfg.window + qc < S:
+        # banded forward: only ceil((W+qc)/kc)+1 kv chunks can be live per row
+        band = min((-(-(cfg.window + qc) // kc) + 1) * kc, S)
+
+        def row(qi):
+            start = jnp.clip(qi * qc + qc - band, 0, S - band)
+            kb = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(kv_pos, start, band, axis=0)
+            nb = band // kc
+            return _fwd_row(cfg, qr[:, qi], qpr[qi],
+                            kb.reshape(B, nb, kc, H, hd).transpose(1, 0, 2, 3, 4),
+                            vb.reshape(B, nb, kc, H, hd).transpose(1, 0, 2, 3, 4),
+                            kp.reshape(nb, kc))
+
+        outs, lses = jax.lax.map(row, jnp.arange(nq))
+    else:
+        kr = k.reshape(B, nk, kc, H, hd).transpose(1, 0, 2, 3, 4)
+        vr = v.reshape(B, nk, kc, H, hd).transpose(1, 0, 2, 3, 4)
+        kpr = kv_pos.reshape(nk, kc)
+
+        def row(qi):
+            return _fwd_row(cfg, qr[:, qi], qpr[qi], kr, vr, kpr)
+
+        outs, lses = jax.lax.map(row, jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    lse = lses.transpose(1, 2, 0, 3).reshape(B, H, S)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash(cfg: FlashCfg, q, k, v, q_pos, kv_pos):
+    out, _ = _fwd_impl(cfg, q, k, v, q_pos, kv_pos)
+    return out
+
+
+def _flash_fwd(cfg, q, k, v, q_pos, kv_pos):
+    out, lse = _fwd_impl(cfg, q, k, v, q_pos, kv_pos)
+    return out, (q, k, v, q_pos, kv_pos, out, lse)
+
+
+def _flash_bwd(cfg, res, g):
+    q, k, v, q_pos, kv_pos, out, lse = res
+    B, S, H, hd = q.shape
+    qc, kc = min(cfg.qc, S), min(cfg.kc, S)
+    nq, nk = S // qc, S // kc
+    g = g.astype(jnp.float32)
+    delta = jnp.einsum("bshd,bshd->bhs", g, out)            # (B,H,S)
+
+    qr = q.reshape(B, nq, qc, H, hd)
+    gr = g.reshape(B, nq, qc, H, hd)
+    kr = k.reshape(B, nk, kc, H, hd)
+    vr = v.reshape(B, nk, kc, H, hd)
+    qpr = q_pos.reshape(nq, qc)
+    kpr = kv_pos.reshape(nk, kc)
+    lser = lse.reshape(B, H, nq, qc)
+    deltar = delta.reshape(B, H, nq, qc)
+
+    def block(qi, ki, dq_row_acc, dk_acc, dv_acc):
+        qb = qr[:, qi].astype(jnp.float32)
+        gb = gr[:, qi]
+        kb, vb = kr[:, ki].astype(jnp.float32), vr[:, ki].astype(jnp.float32)
+        qp, kp = qpr[qi], kpr[ki]
+        raw = jnp.einsum("bqhd,bchd->bhqc", qb, kb) * cfg.scale
+        if cfg.softcap is not None:
+            t = jnp.tanh(raw / cfg.softcap)
+            capped = cfg.softcap * t
+            dcap = 1.0 - t * t
+        else:
+            capped, dcap = raw, None
+        mask = kp[None, None, None, :] <= qp[None, None, :, None]
+        if cfg.window is not None:
+            mask &= kp[None, None, None, :] > (qp[None, None, :, None]
+                                               - cfg.window)
+        p = jnp.where(mask, jnp.exp(capped - lser[:, :, qi][..., None]), 0.0)
+        dv_acc = dv_acc + jnp.einsum("bhqc,bqhd->bchd", p, gb)
+        dp = jnp.einsum("bqhd,bchd->bhqc", gb, vb)
+        ds = p * (dp - deltar[:, :, qi][..., None])
+        if dcap is not None:
+            ds = ds * dcap
+        dq_row_acc = dq_row_acc + jnp.einsum("bhqc,bchd->bqhd", ds, kb) * cfg.scale
+        dk_acc = dk_acc + jnp.einsum("bhqc,bqhd->bchd", ds, qb) * cfg.scale
+        return dq_row_acc, dk_acc, dv_acc
+
+    def outer(dq_full, ki):
+        def inner(carry, qi):
+            dq_full, dk_acc, dv_acc = carry
+            dq_row = jax.lax.dynamic_slice_in_dim(dq_full, qi * qc, qc, axis=1)
+            dq_row, dk_acc, dv_acc = block(qi, ki, dq_row, dk_acc, dv_acc)
+            dq_full = jax.lax.dynamic_update_slice_in_dim(
+                dq_full, dq_row, qi * qc, axis=1)
+            return (dq_full, dk_acc, dv_acc), None
+
+        zeros_kv = jnp.zeros((B, kc, H, hd), jnp.float32)
+        (dq_full, dk_acc, dv_acc), _ = jax.lax.scan(
+            inner, (dq_full, zeros_kv, zeros_kv), jnp.arange(nq))
+        return dq_full, (dk_acc, dv_acc)
+
+    dq0 = jnp.zeros((B, S, H, hd), jnp.float32)
+    dq, (dk_s, dv_s) = jax.lax.scan(outer, dq0, jnp.arange(nk))
+    dk = dk_s.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    dv = dv_s.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    f0 = lambda x: np.zeros(x.shape, jax.dtypes.float0)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            f0(q_pos), f0(kv_pos))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, q_pos, kv_pos, scale=None, softcap=None,
+                    window=None, q_chunk: int = 512, kv_chunk: int = 512):
+    """q (B,S,H,hd), k/v (B,S,H,hd) pre-repeated -> (B,S,H,hd) f32."""
+    scale = scale if scale is not None else 1.0 / math.sqrt(q.shape[-1])
+    cfg = FlashCfg(scale=float(scale),
+                   softcap=float(softcap) if softcap is not None else None,
+                   window=int(window) if window is not None else None,
+                   qc=q_chunk, kc=kv_chunk)
+    return _flash(cfg, q, k, v, q_pos, kv_pos)

@@ -1,0 +1,196 @@
+"""Base layers + the sharding-rules system.
+
+Sharding follows the MaxText "logical axis" pattern: layer code names each
+weight dimension with a *logical* axis ("embed", "mlp", "vocab", "heads",
+"experts", ...) and `ShardingRules` maps logical -> physical mesh axes.
+The default rules implement TP over "model" and ZeRO-3/FSDP over "data"
+(weights' embed dims sharded over the data axis; XLA SPMD inserts the
+per-layer all-gathers, which under scan-over-layers become the classic
+FSDP prefetch pattern).  The "pod" axis is pure data parallelism: the only
+cross-pod traffic is the gradient all-reduce (see optim.compression for the
+int8 hook applied there).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "Initializer", "linear",
+           "rmsnorm", "layernorm", "embedding", "apply_linear", "apply_rmsnorm",
+           "apply_layernorm", "glu_mlp", "apply_glu_mlp", "mlp", "apply_mlp"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical -> physical mesh-axis mapping."""
+
+    mapping: dict = dataclasses.field(default_factory=lambda: dict(DEFAULT_MAPPING))
+
+    def spec(self, *logical: Optional[str]) -> P:
+        phys = []
+        used: set = set()
+        for name in logical:
+            ax = self.mapping.get(name) if name is not None else None
+            # never map two dims of one tensor onto the same mesh axis
+            flat = tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
+            if any(a in used for a in flat if a is not None):
+                ax = None
+            for a in flat:
+                if a is not None:
+                    used.add(a)
+            phys.append(ax)
+        return P(*phys)
+
+    def replace(self, **updates) -> "ShardingRules":
+        m = dict(self.mapping)
+        m.update(updates)
+        return ShardingRules(mapping=m)
+
+
+DEFAULT_MAPPING = {
+    # weight dims
+    "embed": "data",          # FSDP / ZeRO-3: model dim of weights over data
+    "mlp": "model",           # TP column/row parallel
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": None,         # replicated when kv < tp (Megatron GQA pattern)
+    "head_dim": None,
+    "experts": "model",       # EP
+    "expert_mlp": "data",     # FSDP inside each expert
+    "inner": "model",         # mamba d_inner
+    "state": None,
+    "conv": None,
+    "layers": None,           # scan dim, never sharded
+    # activation dims
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "cache_seq": None,
+    "cache_kv": None,
+}
+
+DEFAULT_RULES = ShardingRules()
+
+
+class Initializer:
+    """Collects (params, specs) while layers declare weights.
+
+    mode="zeros" builds real arrays cheaply (smoke tests); mode="normal"
+    does fan-in-scaled gaussian init; everything is also usable under
+    jax.eval_shape for the allocation-free dry-run path.
+    """
+
+    def __init__(self, key: jax.Array, rules: ShardingRules = DEFAULT_RULES,
+                 dtype: jnp.dtype = jnp.float32, mode: str = "normal"):
+        self.key = key
+        self.rules = rules
+        self.dtype = dtype
+        self.mode = mode
+
+    def next_key(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def weight(self, shape, logical, *, scale: Optional[float] = None,
+               dtype=None, zero: bool = False):
+        dtype = dtype or self.dtype
+        spec = self.rules.spec(*logical)
+        if zero or self.mode == "zeros":
+            arr = jnp.zeros(shape, dtype)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            s = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+            arr = (jax.random.normal(self.next_key(), shape, jnp.float32) * s).astype(dtype)
+        return arr, spec
+
+
+# ---------------------------------------------------------------------------
+# layers: init returns (params, specs); apply_* are pure functions.
+# ---------------------------------------------------------------------------
+
+def linear(init: Initializer, in_dim: int, out_dim: int,
+           axes=("embed", "mlp"), bias: bool = False):
+    w, ws = init.weight((in_dim, out_dim), axes)
+    params, specs = {"w": w}, {"w": ws}
+    if bias:
+        b, bs = init.weight((out_dim,), (axes[1],), zero=True)
+        params["b"], specs["b"] = b, bs
+    return params, specs
+
+
+def apply_linear(p, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm(init: Initializer, dim: int, axes=("act_embed",)):
+    g, gs = init.weight((dim,), axes, zero=True)  # gemma-style (1+g); zero init
+    return {"g": g}, {"g": gs}
+
+
+def apply_rmsnorm(p, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * (1.0 + p["g"].astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def layernorm(init: Initializer, dim: int, axes=("act_embed",)):
+    g, gs = init.weight((dim,), axes, zero=True)
+    b, bs = init.weight((dim,), axes, zero=True)
+    return {"g": g, "b": b}, {"g": gs, "b": bs}
+
+
+def apply_layernorm(p, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(axis=-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps) * (1.0 + p["g"]) + p["b"]
+    return y.astype(x.dtype)
+
+
+def embedding(init: Initializer, vocab: int, dim: int):
+    w, ws = init.weight((vocab, dim), ("vocab", "embed"), scale=1.0)
+    return {"w": w}, {"w": ws}
+
+
+def apply_embedding(p, ids: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return jnp.take(p["w"], ids, axis=0).astype(dtype)
+
+
+def glu_mlp(init: Initializer, dim: int, hidden: int):
+    """Gated MLP (SwiGLU/GeGLU family)."""
+    wi, wis = init.weight((dim, 2, hidden), ("embed", None, "mlp"))
+    wo, wos = init.weight((hidden, dim), ("mlp", "embed"))
+    return {"wi": wi, "wo": wo}, {"wi": wis, "wo": wos}
+
+
+def apply_glu_mlp(p, x: jax.Array, act: Callable = jax.nn.silu) -> jax.Array:
+    h = jnp.einsum("...d,dch->...ch", x, p["wi"].astype(x.dtype))
+    gated = act(h[..., 0, :]) * h[..., 1, :]
+    return gated @ p["wo"].astype(x.dtype)
+
+
+def mlp(init: Initializer, dim: int, hidden: int):
+    """Plain 2-layer MLP (GELU) — starcoder2 style."""
+    w1, w1s = init.weight((dim, hidden), ("embed", "mlp"))
+    b1, b1s = init.weight((hidden,), ("mlp",), zero=True)
+    w2, w2s = init.weight((hidden, dim), ("mlp", "embed"))
+    b2, b2s = init.weight((dim,), ("embed",), zero=True)
+    return ({"w1": w1, "b1": b1, "w2": w2, "b2": b2},
+            {"w1": w1s, "b1": b1s, "w2": w2s, "b2": b2s})
+
+
+def apply_mlp(p, x: jax.Array, act: Callable = jax.nn.gelu) -> jax.Array:
+    h = act(x @ p["w1"].astype(x.dtype) + p["b1"].astype(x.dtype))
+    return h @ p["w2"].astype(x.dtype) + p["b2"].astype(x.dtype)

@@ -1,0 +1,164 @@
+"""Losses. The important one is the *chunked* softmax cross-entropy.
+
+With 256k vocabularies and ~1M-token global batches, materializing the full
+(B, S, V) logits tensor is impossible (≈1 PB f32 for gemma2 train_4k).
+`chunked_softmax_xent` scans over SEQUENCE chunks: per step it computes a
+(B, c, V) logits chunk (vocab stays `model`-sharded under SPMD), reduces it
+to scalar sums, and discards it.  Peak live logits memory is B_loc * c *
+V/tp — tens of MB per chip instead of petabytes.
+
+Sharding note: the scan axis is the sequence-chunk index (replicated); the
+batch dimension stays *inside* each scan step, so data-parallel sharding is
+preserved without any collective per chunk except the logsumexp/psum the
+vocab sharding itself needs.  (Chunking flattened tokens instead would put
+the sharded batch dim on the scan axis — an SPMD anti-pattern that forces
+per-step gathers.)
+
+A custom VJP keeps the backward pass chunked too: naive autodiff of the scan
+would save every logits chunk (defeating the point); the backward recomputes
+each chunk's softmax and accumulates dX / dW directly — O(1) live logits in
+both passes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_softmax_xent", "softmax_xent_dense"]
+
+
+def softmax_xent_dense(x: jax.Array, w_unembed: jax.Array, labels: jax.Array,
+                       *, mask: Optional[jax.Array] = None,
+                       z_loss: float = 0.0, logit_softcap: Optional[float] = None):
+    """Reference (dense) path: x (B,S,d) @ w (d,V) vs labels (B,S).
+
+    Returns (mean_loss, metrics). mask: (B,S) 1.0 = count the token.
+    """
+    logits = x.astype(jnp.float32) @ w_unembed.astype(jnp.float32)
+    if logit_softcap is not None:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    per_tok = lse - ll
+    if z_loss:
+        per_tok = per_tok + z_loss * lse**2
+    if mask is None:
+        mask = jnp.ones_like(per_tok)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (per_tok * mask).sum() / denom
+    acc = ((logits.argmax(-1) == labels) * mask).sum() / denom
+    return loss, {"xent": loss, "accuracy": acc, "tokens": denom}
+
+
+def _chunk_fwd(xc, w, yc, mc, *, z_loss, softcap):
+    """One chunk: xc (B, c, d) f32, w (d, V), yc/mc (B, c) ->
+    (sum_loss, sum_correct)."""
+    logits = jnp.einsum("bcd,dv->bcv", xc, w)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    lse = jax.nn.logsumexp(logits, axis=-1)                # (B, c)
+    onehot = jax.nn.one_hot(yc, w.shape[1], dtype=jnp.float32)
+    ll = (logits * onehot).sum(-1)
+    per_tok = lse - ll
+    if z_loss:
+        per_tok = per_tok + z_loss * lse**2
+    correct = (logits.argmax(-1) == yc).astype(jnp.float32)
+    return (per_tok * mc).sum(), (correct * mc).sum()
+
+
+def _chunk_bwd(xc, w, yc, mc, g, *, z_loss, softcap):
+    """Backward of one chunk w.r.t. (xc, w): d(sum_loss)/d· * g."""
+    logits_raw = jnp.einsum("bcd,dv->bcv", xc, w)
+    if softcap is not None:
+        t = jnp.tanh(logits_raw / softcap)
+        logits = softcap * t
+        dcap = 1.0 - t * t                                 # d logits / d raw
+    else:
+        logits, dcap = logits_raw, None
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    p = jnp.exp(logits - lse[..., None])
+    onehot = jax.nn.one_hot(yc, w.shape[1], dtype=jnp.float32)
+    dlogits = p - onehot                                   # d per_tok / d logits
+    if z_loss:
+        dlogits = dlogits + (2.0 * z_loss) * lse[..., None] * p
+    dlogits = dlogits * (mc * g)[..., None]
+    if dcap is not None:
+        dlogits = dlogits * dcap
+    dx = jnp.einsum("bcv,dv->bcd", dlogits, w)
+    dw = jnp.einsum("bcd,bcv->dv", xc, dlogits)
+    return dx, dw
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _chunked_sums(x, w, labels, mask, nchunks: int,
+                  z_loss: float, softcap: Optional[float]):
+    """x (B,S,d) f32 -> (sum_loss, sum_correct), scanning S in chunks."""
+    B, S, d = x.shape
+    c = S // nchunks
+    xr = x.reshape(B, nchunks, c, d).transpose(1, 0, 2, 3)        # (n,B,c,d)
+    yr = labels.reshape(B, nchunks, c).transpose(1, 0, 2)
+    mr = mask.reshape(B, nchunks, c).transpose(1, 0, 2)
+
+    def step(acc, inp):
+        xc, yc, mc = inp
+        sl, sc = _chunk_fwd(xc, w, yc, mc, z_loss=z_loss, softcap=softcap)
+        return (acc[0] + sl, acc[1] + sc), None
+
+    (sl, sc), _ = jax.lax.scan(step, (jnp.float32(0), jnp.float32(0)),
+                               (xr, yr, mr))
+    return sl, sc
+
+
+def _chunked_sums_fwd(x, w, labels, mask, nchunks, z_loss, softcap):
+    out = _chunked_sums(x, w, labels, mask, nchunks, z_loss, softcap)
+    return out, (x, w, labels, mask)
+
+
+def _chunked_sums_bwd(nchunks, z_loss, softcap, res, g):
+    x, w, labels, mask = res
+    gl = g[0]                                   # d/d sum_loss (accuracy: no grad)
+    B, S, d = x.shape
+    c = S // nchunks
+    xr = x.reshape(B, nchunks, c, d).transpose(1, 0, 2, 3)
+    yr = labels.reshape(B, nchunks, c).transpose(1, 0, 2)
+    mr = mask.reshape(B, nchunks, c).transpose(1, 0, 2)
+
+    def step(dw_acc, inp):
+        xc, yc, mc = inp
+        dx, dw = _chunk_bwd(xc, w, yc, mc, gl, z_loss=z_loss, softcap=softcap)
+        return dw_acc + dw, dx
+
+    dw, dxr = jax.lax.scan(step, jnp.zeros_like(w, jnp.float32), (xr, yr, mr))
+    dx = dxr.transpose(1, 0, 2, 3).reshape(B, S, d)
+    return dx, dw, None, None
+
+
+_chunked_sums.defvjp(_chunked_sums_fwd, _chunked_sums_bwd)
+
+
+def chunked_softmax_xent(x: jax.Array, w_unembed: jax.Array, labels: jax.Array,
+                         *, mask: Optional[jax.Array] = None,
+                         chunk: int = 512, z_loss: float = 0.0,
+                         logit_softcap: Optional[float] = None):
+    """Chunked CE: x (B,S,d), w (d,V), labels (B,S) -> (mean_loss, metrics).
+
+    The sequence is scanned `chunk` tokens at a time; logits for a chunk
+    never outlive the scan step (forward AND backward — custom VJP).
+    """
+    B, S, d = x.shape
+    c = min(chunk, S)
+    while S % c != 0:                      # static: shapes are concrete
+        c -= 1
+    nchunks = S // c
+    x32 = x.astype(jnp.float32)
+    m = (jnp.ones((B, S), jnp.float32) if mask is None
+         else mask.astype(jnp.float32))
+    w32 = w_unembed.astype(jnp.float32)
+    sum_loss, sum_correct = _chunked_sums(x32, w32, labels, m, nchunks,
+                                          z_loss, logit_softcap)
+    denom = jnp.maximum(m.sum(), 1.0)
+    loss = sum_loss / denom
+    return loss, {"xent": loss, "accuracy": sum_correct / denom, "tokens": denom}

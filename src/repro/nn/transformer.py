@@ -1,0 +1,490 @@
+"""LM-family transformer assembly: one definition covering all ten assigned
+architectures (dense GQA, local/global alternation, SWA, logit softcaps,
+MoE, Mamba-only, Mamba+attention hybrid, M-RoPE VLM backbone, audio LM).
+
+Structure
+---------
+An architecture is an `LMConfig` whose `period` is a tuple of `LayerSpec`s;
+the model is `n_layers / len(period)` repeats of that period, executed with a
+single `jax.lax.scan` over stacked per-slot weights — HLO size stays O(1) in
+depth (94-layer qwen3-moe compiles in the same HLO footprint as a 2-layer
+toy), which is required both for CPU dry-run compile times and for real
+1000+-chip jobs.
+
+Sharding: every weight is declared with logical axes (see `layers.py`);
+`lm_init` returns `(params, specs)` of identical structure.  Activations are
+batch-sharded between blocks; TP/EP/FSDP layouts come from the specs, and XLA
+SPMD inserts the collectives.
+
+The scan body is wrapped in `jax.checkpoint` with a configurable remat
+policy — the activation-checkpointing knob of the §Perf loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import (AttnParams, attention_decode, attention_forward,
+                                attention_init, init_cache)
+from repro.nn.layers import (DEFAULT_RULES, Initializer, ShardingRules,
+                             apply_glu_mlp, apply_layernorm, apply_mlp,
+                             apply_rmsnorm, glu_mlp, layernorm, mlp, rmsnorm)
+from repro.nn.losses import chunked_softmax_xent
+from repro.nn.mamba import (MambaParams, init_mamba_state, mamba_decode,
+                            mamba_forward, mamba_init)
+from repro.nn.moe import MoEParams, moe_apply, moe_init
+
+__all__ = ["LayerSpec", "LMConfig", "lm_init", "lm_forward", "lm_loss",
+           "lm_prefill", "lm_decode_step", "init_lm_cache", "param_count"]
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One slot of the repeating layer period."""
+
+    kind: str = "attn"            # "attn" | "mamba"
+    mlp: str = "glu"              # "glu" | "mlp" | "moe" | "none"
+    window: Optional[int] = None  # sliding-window width for this slot
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    # attention (ignored by pure-mamba archs)
+    n_heads: int = 0
+    n_kv: int = 0
+    head_dim: int = 0
+    # dense FFN width (per-expert width for MoE slots comes from `moe`)
+    d_ff: int = 0
+    period: tuple = (LayerSpec(),)
+    # positional / attention details
+    rope: str = "rope"            # "rope" | "mrope" | "none"
+    rope_theta: float = 10000.0
+    posemb: str = "none"          # "none" | "sinusoidal" (musicgen)
+    mrope_sections: tuple = (16, 24, 24)
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    qk_norm: bool = False
+    attn_bias: bool = False
+    query_scale: Optional[float] = None
+    # one fused (d, H+2K, hd) projection.  Hypothesis (§Perf iteration 7):
+    # one backward dx all-reduce instead of three.  REFUTED on gemma2-9b:
+    # XLA already merges the three dx ARs into one tuple-AR, and slicing a
+    # model-sharded fused dim at the q/k/v boundaries concentrates q heads
+    # on half the ranks (collective +6%).  Default stays False; knob kept.
+    fused_qkv: bool = False
+    # norms / activations
+    norm: str = "rms"             # "rms" | "ln"
+    post_norm: bool = False       # gemma2-style post-block norms
+    act: str = "silu"             # "silu" | "gelu"
+    # sub-block params
+    moe: Optional[MoEParams] = None
+    mamba: Optional[MambaParams] = None
+    # embedding
+    embed_scale: float = 1.0      # gemma: sqrt(d_model)
+    tie_embeddings: bool = False
+    frontend: str = "tokens"      # "tokens" | "embeds" (audio/vlm stubs)
+    # training details
+    aux_loss_weight: float = 0.01
+    z_loss: float = 1e-4
+    dtype: Any = jnp.bfloat16
+    remat: str = "full"           # "full" | "dots" | "none"
+    # sequence-shard the inter-layer residual carry over `model` during
+    # training.  Measured on danube train_4k (§Perf iteration 4): the saved
+    # stack DOES shrink tp-fold (temp 23.3 -> 14.8 GB) but GSPMD re-shards
+    # the body pathologically (memory/collective terms blow up 12x), so the
+    # trade is refuted as a default; microbatching (n_micro) is the
+    # supported activation-memory lever.  Kept as an opt-in knob.
+    seq_shard_carry: bool = False
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    causal_mode: str = "flash"   # | "masked_full" | "triangle" (§Perf)
+    loss_chunk: int = 512
+    # serving
+    max_seq: int = 4096
+
+    @property
+    def repeats(self) -> int:
+        P = len(self.period)
+        assert self.n_layers % P == 0, (self.n_layers, P)
+        return self.n_layers // P
+
+    def attn_params(self, spec: LayerSpec) -> AttnParams:
+        return AttnParams(
+            n_heads=self.n_heads, n_kv=self.n_kv, head_dim=self.head_dim,
+            rope=self.rope, rope_theta=self.rope_theta,
+            mrope_sections=self.mrope_sections, window=spec.window,
+            softcap=self.attn_softcap, qk_norm=self.qk_norm,
+            bias=self.attn_bias, query_scale=self.query_scale,
+            fused_qkv=self.fused_qkv)
+
+    @property
+    def activation(self):
+        return jax.nn.silu if self.act == "silu" else jax.nn.gelu
+
+
+def _norm_init(cfg: LMConfig, init: Initializer, dim: int):
+    return rmsnorm(init, dim) if cfg.norm == "rms" else layernorm(init, dim)
+
+
+def _apply_norm(cfg: LMConfig, p, x):
+    return apply_rmsnorm(p, x) if cfg.norm == "rms" else apply_layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+class _StackedInit:
+    """Initializer proxy that prepends a (repeats,) 'layers' axis to every
+    weight — the storage layout of scan-over-layers."""
+
+    def __init__(self, inner: Initializer, repeats: int):
+        self._inner = inner
+        self._repeats = repeats
+        self.mode = inner.mode
+        self.dtype = inner.dtype
+        self.rules = inner.rules
+
+    def weight(self, shape, logical, **kw):
+        return self._inner.weight((self._repeats,) + tuple(shape),
+                                  ("layers",) + tuple(logical), **kw)
+
+
+def _slot_init(cfg: LMConfig, spec: LayerSpec, init) -> tuple[dict, dict]:
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = _norm_init(cfg, init, cfg.d_model)
+    if spec.kind == "attn":
+        p["attn"], s["attn"] = attention_init(init, cfg.d_model,
+                                              cfg.attn_params(spec))
+    else:
+        p["mamba"], s["mamba"] = mamba_init(init, cfg.d_model, cfg.mamba)
+    if cfg.post_norm:
+        p["post1"], s["post1"] = _norm_init(cfg, init, cfg.d_model)
+    if spec.mlp != "none":
+        p["norm2"], s["norm2"] = _norm_init(cfg, init, cfg.d_model)
+        if spec.mlp == "glu":
+            p["ffn"], s["ffn"] = glu_mlp(init, cfg.d_model, cfg.d_ff)
+        elif spec.mlp == "mlp":
+            p["ffn"], s["ffn"] = mlp(init, cfg.d_model, cfg.d_ff)
+        elif spec.mlp == "moe":
+            p["ffn"], s["ffn"] = moe_init(init, cfg.d_model, cfg.moe)
+        else:
+            raise ValueError(spec.mlp)
+        if cfg.post_norm:
+            p["post2"], s["post2"] = _norm_init(cfg, init, cfg.d_model)
+    return p, s
+
+
+def lm_init(cfg: LMConfig, key: jax.Array, *,
+            rules: ShardingRules = DEFAULT_RULES, mode: str = "normal",
+            dtype=None) -> tuple[Pytree, Pytree]:
+    """Build (params, sharding-specs) for the whole LM."""
+    init = Initializer(key, rules=rules, dtype=dtype or cfg.dtype, mode=mode)
+    p, s = {}, {}
+    if cfg.frontend == "tokens":
+        # tied heads reuse the table as the unembed: init at 1/sqrt(d) so
+        # initial logits are O(1) (the embed_scale multiplier compensates
+        # on the input side, gemma-style)
+        e_scale = 1.0 / math.sqrt(cfg.d_model) if cfg.tie_embeddings else 1.0
+        p["embed"], s["embed"] = init.weight((cfg.vocab, cfg.d_model),
+                                             ("vocab", "embed"), scale=e_scale)
+    if not (cfg.tie_embeddings and cfg.frontend == "tokens"):
+        p["unembed"], s["unembed"] = init.weight(
+            (cfg.d_model, cfg.vocab), ("embed", "vocab"),
+            scale=1.0 / math.sqrt(cfg.d_model))
+    p["final_norm"], s["final_norm"] = _norm_init(cfg, init, cfg.d_model)
+    stacked = _StackedInit(init, cfg.repeats)
+    blocks_p, blocks_s = [], []
+    for spec in cfg.period:
+        bp, bs = _slot_init(cfg, spec, stacked)
+        blocks_p.append(bp)
+        blocks_s.append(bs)
+    p["blocks"], s["blocks"] = tuple(blocks_p), tuple(blocks_s)
+    return p, s
+
+
+def param_count(params: Pytree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _sinusoidal(pos: jax.Array, dim: int) -> jax.Array:
+    """pos (B, S) -> (B, S, dim) float32 sinusoidal embedding."""
+    half = dim // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _slot_forward(cfg: LMConfig, spec: LayerSpec, bp, x, pos,
+                  mesh=None):
+    """One layer forward. Returns (x, aux_loss)."""
+    aux = jnp.float32(0)
+    h = _apply_norm(cfg, bp["norm1"], x)
+    if spec.kind == "attn":
+        h = attention_forward(bp["attn"], cfg.attn_params(spec), h, pos,
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                              causal_mode=cfg.causal_mode)
+    else:
+        h = mamba_forward(bp["mamba"], h, cfg.mamba)
+    if cfg.post_norm:
+        h = _apply_norm(cfg, bp["post1"], h)
+    x = x + h
+    if spec.mlp != "none":
+        h = _apply_norm(cfg, bp["norm2"], x)
+        if spec.mlp == "glu":
+            h = apply_glu_mlp(bp["ffn"], h, act=cfg.activation)
+        elif spec.mlp == "mlp":
+            h = apply_mlp(bp["ffn"], h, act=cfg.activation)
+        else:
+            h, aux, _dropped = moe_apply(bp["ffn"], h, cfg.moe, mesh=mesh)
+        if cfg.post_norm:
+            h = _apply_norm(cfg, bp["post2"], h)
+        x = x + h
+    return x, aux
+
+
+def _cx(x, mesh, *, seq_shard: bool = False):
+    """Constrain an activation to batch-sharded (pod, data) layout.
+
+    Without explicit constraints GSPMD happily propagates WEIGHT shardings
+    into activations (measured: d_model sharded over `data`, batch
+    replicated — 16x the activation memory and a 1 GB all-reduce per loss
+    chunk on the danube baseline; see EXPERIMENTS.md §Perf iteration 2).
+
+    seq_shard=True additionally shards dim 1 (sequence) over `model` —
+    sequence-parallel residual storage for the scan carry.
+    """
+    if mesh is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import constrain
+    b = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    rest = [None] * (x.ndim - 1)
+    if seq_shard and x.ndim >= 2 and "model" in mesh.axis_names:
+        rest[0] = "model"
+    return constrain(x, mesh, P(b, *rest))
+
+
+_REMAT_POLICIES = {
+    "full": None,                       # save nothing, recompute everything
+    "dots": "dots_with_no_batch_dims_saveable",
+    "none": "everything_saveable",
+}
+
+
+def _maybe_remat(cfg: LMConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = _REMAT_POLICIES[cfg.remat]
+    if policy is None:
+        return jax.checkpoint(fn)
+    return jax.checkpoint(fn, policy=getattr(jax.checkpoint_policies, policy))
+
+
+def _embed_in(cfg: LMConfig, params, tokens_or_embeds, pos):
+    if cfg.frontend == "tokens":
+        x = jnp.take(params["embed"], tokens_or_embeds, axis=0).astype(cfg.dtype)
+    else:
+        x = tokens_or_embeds.astype(cfg.dtype)
+    x = x * jnp.asarray(cfg.embed_scale, cfg.dtype)
+    if cfg.posemb == "sinusoidal":
+        pos1d = pos if pos.ndim == 2 else pos[:, 0]
+        x = x + _sinusoidal(pos1d, cfg.d_model).astype(cfg.dtype)
+    return x
+
+
+def _unembed_w(cfg: LMConfig, params):
+    if cfg.tie_embeddings and cfg.frontend == "tokens":
+        return params["embed"].T
+    return params["unembed"]
+
+
+def lm_forward(params, cfg: LMConfig, tokens_or_embeds: jax.Array,
+               pos: jax.Array, *, mesh=None, collect_kv: bool = False):
+    """Run the trunk. Returns (hidden (B,S,d), aux_loss, kv_caches|None).
+
+    tokens (B,S) int32 for `frontend="tokens"`, else embeds (B,S,d).
+    pos: (B,S) int32, or (B,3,S) for mrope.
+    """
+    x = _cx(_embed_in(cfg, params, tokens_or_embeds, pos), mesh)
+    P = len(cfg.period)
+
+    seq_shard_carry = cfg.seq_shard_carry and not collect_kv
+
+    def body(carry, slot_params):
+        x, aux = carry
+        # match the carry-out spec so the remat-saved stack stays sharded
+        x = _cx(x, mesh, seq_shard=seq_shard_carry)
+        kvs = []
+        for spec, bp in zip(cfg.period, slot_params):
+            if collect_kv and spec.kind == "attn":
+                h = _apply_norm(cfg, bp["norm1"], x)
+                ap = cfg.attn_params(spec)
+                y, (k, v) = attention_forward(
+                    bp["attn"], ap, h, pos, q_chunk=cfg.q_chunk,
+                    kv_chunk=cfg.kv_chunk, causal_mode=cfg.causal_mode,
+                    return_kv=True)
+                if cfg.post_norm:
+                    y = _apply_norm(cfg, bp["post1"], y)
+                x = x + y
+                if spec.mlp != "none":
+                    h2 = _apply_norm(cfg, bp["norm2"], x)
+                    if spec.mlp == "glu":
+                        h2 = apply_glu_mlp(bp["ffn"], h2, act=cfg.activation)
+                    elif spec.mlp == "mlp":
+                        h2 = apply_mlp(bp["ffn"], h2, act=cfg.activation)
+                    else:
+                        h2, a, _ = moe_apply(bp["ffn"], h2, cfg.moe, mesh=mesh)
+                        aux = aux + a
+                    if cfg.post_norm:
+                        h2 = _apply_norm(cfg, bp["post2"], h2)
+                    x = x + h2
+                kvs.append((k, v))
+            else:
+                x, a = _slot_forward(cfg, spec, bp, x, pos, mesh=mesh)
+                aux = aux + a
+                if collect_kv:
+                    kvs.append(None)
+        return (_cx(x, mesh, seq_shard=seq_shard_carry), aux), \
+            tuple(kvs) if collect_kv else None
+
+    body = _maybe_remat(cfg, body)
+    (x, aux), kv_stacked = jax.lax.scan(body, (x, jnp.float32(0)),
+                                        params["blocks"])
+    x = _cx(_apply_norm(cfg, params["final_norm"], x), mesh)
+    return x, aux, kv_stacked
+
+
+def lm_loss(params, cfg: LMConfig, batch: dict, *, mesh=None):
+    """batch: {"tokens"|"embeds", "labels", "pos", optional "mask"}.
+
+    Returns (loss, metrics).
+    """
+    inputs = batch["tokens"] if cfg.frontend == "tokens" else batch["embeds"]
+    hidden, aux, _ = lm_forward(params, cfg, inputs, batch["pos"], mesh=mesh)
+    mask = batch.get("mask")
+    xent, metrics = chunked_softmax_xent(
+        hidden, _unembed_w(cfg, params), batch["labels"], mask=mask,
+        chunk=cfg.loss_chunk, z_loss=cfg.z_loss,
+        logit_softcap=cfg.final_softcap)
+    loss = xent + cfg.aux_loss_weight * aux
+    metrics = dict(metrics, aux_loss=aux, loss=loss)
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with stacked caches
+# ---------------------------------------------------------------------------
+
+def init_lm_cache(cfg: LMConfig, batch: int, max_seq: Optional[int] = None,
+                  dtype=jnp.bfloat16) -> Pytree:
+    """Cache pytree: tuple over period slots; attention slots carry stacked
+    (R, B, S_c, K, hd) ring/linear KV buffers, mamba slots carry stacked
+    (R, B, d_inner, N) states + conv tails."""
+    S = max_seq or cfg.max_seq
+    R = cfg.repeats
+    slots = []
+    for spec in cfg.period:
+        if spec.kind == "attn":
+            one = init_cache(batch, cfg.attn_params(spec), S, dtype=dtype)
+        else:
+            one = init_mamba_state(batch, cfg.d_model, cfg.mamba, dtype=dtype)
+        slots.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (R,) + x.shape), one))
+    return tuple(slots)
+
+
+def lm_prefill(params, cfg: LMConfig, tokens_or_embeds, pos, *, mesh=None):
+    """Prefill pass: returns (last_token_logits (B,V), kv_stacked).
+
+    kv_stacked mirrors the period: attention slots give (k, v) with leading
+    (R,) axis, shape (R, B, S, K, hd); mamba slots give None (serving a
+    hybrid requires a prefill scan carrying SSM state — see lm_decode_step
+    usage in launch/serve.py which decodes from step 0 instead).
+    """
+    hidden, _aux, kvs = lm_forward(params, cfg, tokens_or_embeds, pos,
+                                   mesh=mesh, collect_kv=True)
+    last = hidden[:, -1, :]
+    logits = last.astype(jnp.float32) @ _unembed_w(cfg, params).astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, kvs
+
+
+def _slot_decode(cfg: LMConfig, spec: LayerSpec, bp, cache, x, t, pos):
+    if spec.kind == "attn":
+        h = _apply_norm(cfg, bp["norm1"], x)
+        h, new_cache = attention_decode(bp["attn"], cfg.attn_params(spec), h,
+                                        cache, t, pos)
+    else:
+        h = _apply_norm(cfg, bp["norm1"], x)
+        h, new_cache = mamba_decode(bp["mamba"], h, cache, cfg.mamba)
+    if cfg.post_norm:
+        h = _apply_norm(cfg, bp["post1"], h)
+    x = x + h
+    if spec.mlp != "none":
+        h = _apply_norm(cfg, bp["norm2"], x)
+        if spec.mlp == "glu":
+            h = apply_glu_mlp(bp["ffn"], h, act=cfg.activation)
+        elif spec.mlp == "mlp":
+            h = apply_mlp(bp["ffn"], h, act=cfg.activation)
+        else:
+            h, _aux, _drop = moe_apply(bp["ffn"], h, cfg.moe)
+        if cfg.post_norm:
+            h = _apply_norm(cfg, bp["post2"], h)
+        x = x + h
+    return x, new_cache
+
+
+def lm_decode_step(params, cfg: LMConfig, cache: Pytree,
+                   token_or_embed: jax.Array, t: jax.Array):
+    """One decode step for the whole batch.
+
+    token (B,) int32 (or embed (B, d)); t: scalar int32 position.
+    Returns (logits (B, V) f32, new_cache).
+    """
+    if cfg.frontend == "tokens":
+        inp = token_or_embed[:, None]
+    else:
+        inp = token_or_embed[:, None, :]
+    B = inp.shape[0]
+    if cfg.rope == "mrope":
+        pos = jnp.broadcast_to(t, (B, 3, 1)).astype(jnp.int32)
+        pos_embed = jnp.broadcast_to(t, (B, 1)).astype(jnp.int32)
+    else:
+        pos = jnp.broadcast_to(t, (B, 1)).astype(jnp.int32)
+        pos_embed = pos
+    x = _embed_in(cfg, params, inp, pos_embed)
+
+    def body(x, slot):
+        slot_params, slot_caches = slot
+        new_caches = []
+        for spec, bp, c in zip(cfg.period, slot_params, slot_caches):
+            x, nc = _slot_decode(cfg, spec, bp, c, x, t, pos)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = _apply_norm(cfg, params["final_norm"], x)
+    logits = x[:, 0].astype(jnp.float32) @ _unembed_w(cfg, params).astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, new_cache

@@ -1,0 +1,13 @@
+"""Optimizer substrate: AdamW, schedules, clipping, gradient compression."""
+from repro.optim.adamw import (AdamWConfig, OptState, adamw_init, adamw_update,
+                               clip_by_global_norm, cosine_schedule,
+                               global_norm, linear_warmup)
+from repro.optim.compression import (compress_decompress, compressed_psum,
+                                     dequantize_int8, ef_init, quantize_int8)
+
+__all__ = [
+    "AdamWConfig", "OptState", "adamw_init", "adamw_update",
+    "clip_by_global_norm", "cosine_schedule", "global_norm", "linear_warmup",
+    "compress_decompress", "compressed_psum", "dequantize_int8", "ef_init",
+    "quantize_int8",
+]

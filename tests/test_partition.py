@@ -1,0 +1,84 @@
+"""Property tests for the group partitioner (paper §5.1 invariants)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import partition_graph, partition_stats
+from repro.graphs.csr import random_community_graph, random_power_law
+
+
+def _reconstruct_edges(p):
+    """Recover the (dst, src, val) multiset from a GroupPartition."""
+    T, gpt, gs = p.nbrs.shape
+    node = (p.tile_node_block[:, None] * p.ont + p.local_node).reshape(T, gpt)
+    out = []
+    for t in range(T):
+        for g in range(gpt):
+            for s in range(gs):
+                if p.edge_val[t, g, s] != 0.0:
+                    out.append((int(node[t, g]), int(p.nbrs[t, g, s]),
+                                float(p.edge_val[t, g, s])))
+    return sorted(out)
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(10, 80), deg=st.floats(1.0, 6.0),
+       gs=st.sampled_from([2, 4, 8]), src_win=st.sampled_from([16, 32, 64]),
+       seed=st.integers(0, 9999))
+def test_every_edge_exactly_once(n, deg, gs, src_win, seed):
+    g = random_power_law(n, deg, seed=seed)
+    rng = np.random.default_rng(seed)
+    ev = rng.uniform(0.5, 2.0, g.num_edges).astype(np.float32)
+    p = partition_graph(g, gs=gs, gpt=4, ont=8, src_win=src_win, edge_vals=ev)
+    got = _reconstruct_edges(p)
+    want = []
+    for v in range(g.num_nodes):
+        s, e = g.indptr[v], g.indptr[v + 1]
+        order = np.argsort(g.indices[s:e], kind="stable")
+        for j in order:
+            want.append((v, int(g.indices[s:e][j]), float(ev[s:e][j])))
+    assert sorted(want) == got
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(10, 80), deg=st.floats(1.0, 6.0), seed=st.integers(0, 9999))
+def test_groups_window_homogeneous(n, deg, seed):
+    """Every real neighbor in a tile lies inside the tile's feature window."""
+    g = random_power_law(n, deg, seed=seed)
+    p = partition_graph(g, gs=4, gpt=4, ont=8, src_win=32)
+    for t in range(p.num_tiles):
+        w = p.tile_window[t]
+        real = p.edge_val[t] != 0
+        nb = p.nbrs[t][real]
+        assert np.all(nb // p.src_win == w), (t, w, nb)
+
+
+def test_tiles_sorted_for_revisit(small_graph):
+    """Consecutive tiles of one node block are adjacent (leader-node flush)."""
+    p = partition_graph(small_graph, gs=8, gpt=8, ont=8, src_win=64)
+    nb = p.tile_node_block
+    # node blocks must form contiguous runs
+    seen = set()
+    prev = None
+    for b in nb:
+        if b != prev:
+            assert b not in seen, "node block revisited non-contiguously"
+            seen.add(int(b))
+            prev = b
+
+
+def test_stats_consistency(small_graph):
+    p = partition_graph(small_graph, gs=8, gpt=8, ont=8, src_win=64)
+    s = partition_stats(p)
+    assert s["edges"] == small_graph.num_edges
+    assert s["tiles"] == p.num_tiles
+    assert 0 < s["slot_occupancy"] <= 1.0
+    assert s["flushes"] <= s["tiles"]
+    assert s["window_dmas"] <= s["tiles"]
+
+
+def test_empty_graph():
+    from repro.graphs.csr import CSRGraph
+    g = CSRGraph(np.zeros(5, np.int64), np.zeros(0, np.int32))
+    p = partition_graph(g, gs=4, gpt=4, ont=8, src_win=32)
+    assert p.num_tiles == 0

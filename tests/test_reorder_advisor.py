@@ -1,0 +1,123 @@
+"""§6.1 renumbering + §7 advisor loop tests."""
+import numpy as np
+import pytest
+
+from repro.core.advisor import advise
+from repro.core.aggregate import PlanExecutor
+from repro.core.extractor import extract_graph_props
+from repro.core.model import AggConfig, KernelModel, config_is_feasible, paper_eq2_latency
+from repro.core.partition import partition_graph, partition_stats
+from repro.core.reorder import renumber
+from repro.core.tuner import community_profile, evolve, tune
+from repro.graphs.csr import random_community_graph, random_power_law
+
+
+def test_renumber_is_permutation(community_graph):
+    perm = renumber(community_graph, seed=0)
+    n = community_graph.num_nodes
+    assert sorted(perm.tolist()) == list(range(n))
+
+
+def test_renumber_improves_locality():
+    """Scrambled community graph: renumbering must reduce tile count
+    (fewer feature-window DMAs — the Fig. 12b analogue)."""
+    g = random_community_graph(16, 24, p_intra=0.5,
+                               p_inter_edges_per_node=0.2, seed=5)
+    # scramble the natural (already-local) ordering first
+    rng = np.random.default_rng(0)
+    scramble = rng.permutation(g.num_nodes)
+    g_bad = g.permute(scramble)
+    tiles_bad = partition_stats(partition_graph(g_bad, gs=8, gpt=8, ont=8,
+                                                src_win=64))["tiles"]
+    perm = renumber(g_bad, seed=0)
+    g_fix = g_bad.permute(perm)
+    tiles_fix = partition_stats(partition_graph(g_fix, gs=8, gpt=8, ont=8,
+                                                src_win=64))["tiles"]
+    assert tiles_fix < tiles_bad, (tiles_fix, tiles_bad)
+
+
+def test_permute_preserves_edges(community_graph):
+    g = community_graph
+    perm = renumber(g, seed=1)
+    g2 = g.permute(perm)
+    e1 = set()
+    for v in range(g.num_nodes):
+        for u in g.neighbors(v):
+            e1.add((perm[v], perm[u]))
+    e2 = set()
+    for v in range(g2.num_nodes):
+        for u in g2.neighbors(v):
+            e2.add((v, int(u)))
+    assert e1 == e2
+
+
+def test_extractor_props(small_graph):
+    props = extract_graph_props(small_graph)
+    assert props.num_nodes == small_graph.num_nodes
+    assert props.num_edges == small_graph.num_edges
+    assert props.max_degree >= props.avg_degree
+    assert 0.15 <= props.alpha <= 0.3
+
+
+def test_paper_eq2_shape_of_surface(small_graph):
+    """Eq. 2 sanity: finite/positive everywhere; the (1 + |gs - pivot|)
+    penalty grows when gs moves away from the pivot at fixed 1/gs factor."""
+    props = extract_graph_props(small_graph, detect_communities=False)
+    vals = [paper_eq2_latency(props, 64, AggConfig(gs=gs, gpt=g, dt=d))
+            for gs in (4, 16, 64) for g in (8, 32) for d in (64, 256)]
+    assert all(np.isfinite(v) and v > 0 for v in vals)
+    # penalty factor isolated: same gs denominator, larger |gs - pivot|
+    pivot = props.alpha * props.num_nodes / props.num_edges
+    lat = lambda gs: paper_eq2_latency(props, 64, AggConfig(gs=gs)) * gs
+    assert lat(64) >= lat(max(int(round(pivot)), 1))
+
+
+def test_feasibility_constraints():
+    assert config_is_feasible(AggConfig(gs=16, gpt=16, dt=128, src_win=512))
+    # VMEM blow-up must be rejected (Eq. 4 analogue)
+    assert not config_is_feasible(AggConfig(gs=16, gpt=128, dt=512,
+                                            src_win=8192))
+
+
+def test_tuner_monotone_and_feasible(small_graph):
+    res = tune(small_graph, 64, mode="model", iters=8, seed=0)
+    scores = [s for _, s in res.history]
+    assert scores[-1] <= scores[0]
+    assert config_is_feasible(res.best)
+    assert res.evaluations > 0
+
+
+def test_tuner_profile_mode(community_graph):
+    res = tune(community_graph, 32, mode="profile", iters=4, pop=8, seed=0)
+    assert config_is_feasible(res.best)
+
+
+def test_community_profile_scorer():
+    score = community_profile([16, 32], dim=32, seed=0)
+    a = score(AggConfig(gs=8, gpt=16, dt=64, src_win=128))
+    b = score(AggConfig(gs=64, gpt=128, dt=512, src_win=2048))
+    assert a > 0 and b > 0 and np.isfinite([a, b]).all()
+
+
+def test_advisor_end_to_end(community_graph, rng):
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    plan = advise(community_graph, arch="gcn", in_dim=32, hidden_dim=16,
+                  tune_iters=3)
+    ex = PlanExecutor(plan, backend="xla")
+    feat = rng.standard_normal((community_graph.num_nodes, 32)).astype(np.float32)
+    out = ex.aggregate_original_order(jnp.asarray(feat))
+    rows, cols = community_graph.to_coo()
+    want = ref.segment_aggregate_ref(
+        jnp.asarray(feat), jnp.asarray(cols), jnp.asarray(rows),
+        jnp.ones(community_graph.num_edges), community_graph.num_nodes)
+    np.testing.assert_allclose(out, want, atol=1e-3)
+
+
+def test_advisor_skips_reorder_for_local_graphs():
+    """Type-II graphs arrive pre-localized — reorder='auto' must skip."""
+    g = random_community_graph(20, 16, p_intra=0.6,
+                               p_inter_edges_per_node=0.0, seed=7)
+    plan = advise(g, arch="gcn", in_dim=8, hidden_dim=8, reorder="auto",
+                  tune_iters=2)
+    assert plan.perm is None
