@@ -1,0 +1,59 @@
+"""Serving engine benchmark: replay a Zipf request trace and report
+requests/s, latency percentiles, batch occupancy and plan-cache behavior
+(the "one-time cost amortized over many kernel launches" claim, measured).
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
+
+CSV contract per line: name,us_per_call,derived (us_per_call = per request).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def run(smoke: bool = True):
+    import numpy as np
+
+    from benchmarks.common import emit
+    from repro.graphs.csr import random_power_law
+    from repro.launch.serve_gnn import build_trace
+    from repro.models.gnn import GNNConfig
+    from repro.serving import ServingConfig, ServingEngine
+
+    if smoke:
+        num_nodes, requests, batch = 1500, 24, 8
+    else:
+        num_nodes, requests, batch = 20_000, 256, 16
+
+    g = random_power_law(num_nodes, 6.0, seed=0)
+    rng = np.random.default_rng(0)
+    for arch in ["gcn", "gin"]:
+        cfg = GNNConfig(arch=arch, in_dim=16, hidden_dim=16, num_classes=4,
+                        num_layers=2, backend="xla")
+        feat = rng.standard_normal((g.num_nodes, 16)).astype(np.float32)
+        eng = ServingEngine(g, feat, cfg,
+                            serving=ServingConfig(max_batch=batch,
+                                                  tune_iters=2 if smoke else 4))
+        trace = build_trace(g.num_nodes, requests, seed=0)
+        eng.run_trace(trace)
+        s = eng.summary()
+        c = s["cache"]
+        emit(f"serve/{arch}/n{num_nodes}",
+             1e6 / s["req_per_s"],
+             f"p50_ms={s['p50_ms']:.1f};p99_ms={s['p99_ms']:.1f};"
+             f"occupancy={s['batch_occupancy']:.2f};"
+             f"cache_hit={c['hit_rate']:.2f};plans={c['plans']}")
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny graph + few requests (CI budget)")
+    args = p.parse_args(argv)
+    run(smoke=args.smoke)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,6 +19,7 @@ SECTIONS = [
     ("speedup (Fig. 8/10)", "benchmarks.bench_speedup"),
     ("hidden-dim (Fig. 13)", "benchmarks.bench_hidden_dim"),
     ("straggler fleet sim (runtime)", "benchmarks.bench_straggler"),
+    ("serving engine (smoke)", "benchmarks.bench_serve"),
     ("roofline (§Roofline)", "benchmarks.roofline"),
 ]
 

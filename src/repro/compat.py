@@ -1,0 +1,18 @@
+"""jax version-compat shims shared across the codebase.
+
+The repo is written against the current jax API; these shims keep it
+running on older installed versions (0.4.x).  Mesh helpers with the same
+role live in `repro.launch.mesh` (`make_mesh`, `set_mesh`).
+"""
+from __future__ import annotations
+
+__all__ = ["shard_map"]
+
+try:                                    # jax >= 0.6: public API, `check_vma`
+    from jax import shard_map
+except ImportError:                     # older jax: experimental, `check_rep`
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma, **kw)

@@ -21,7 +21,7 @@ from repro.core.reorder import apply_renumbering, renumber
 from repro.core.tuner import TunerResult, tune
 from repro.graphs.csr import CSRGraph
 
-__all__ = ["AggregationPlan", "advise"]
+__all__ = ["AggregationPlan", "advise", "plan_for"]
 
 
 @dataclasses.dataclass
@@ -66,7 +66,6 @@ def advise(g: CSRGraph, *, arch: str = "gcn", in_dim: int = 128,
     irregular to help (the `artist` pathology, §8.6.2).
     """
     props = extract_graph_props(g)
-    archp = extract_arch_props(arch, in_dim, hidden_dim, num_layers)
 
     # --- §6.1 renumbering decision ---
     do_reorder = {"on": True, "off": False}.get(reorder)
@@ -85,20 +84,42 @@ def advise(g: CSRGraph, *, arch: str = "gcn", in_dim: int = 128,
             vals_run = _permute_edge_vals(g, perm, edge_vals)
         props = extract_graph_props(g_run, detect_communities=False)
 
-    # --- §7 modeling & estimating ---
+    plan = plan_for(g_run, arch=arch, in_dim=in_dim, hidden_dim=hidden_dim,
+                    num_layers=num_layers, edge_vals=vals_run, config=config,
+                    tune_mode=tune_mode, tune_iters=tune_iters, seed=seed,
+                    props=props)
+    plan.perm = perm
+    return plan
+
+
+def plan_for(g: CSRGraph, *, arch: str = "gcn", in_dim: int = 128,
+             hidden_dim: int = 128, num_layers: int = 2,
+             edge_vals: Optional[np.ndarray] = None,
+             config: Optional[AggConfig] = None,
+             tune_mode: str = "model", tune_iters: int = 12,
+             seed: int = 0, props: Optional[GraphProps] = None,
+             ) -> AggregationPlan:
+    """Pure planning: props -> (tune unless `config` given) -> partition.
+
+    Unlike `advise` this never renumbers or mutates the input — it is the
+    entry point the serving plan cache calls with memoized configs so a plan
+    for a bucketed subgraph can be rebuilt without re-running the tuner.
+    """
+    if props is None:
+        props = extract_graph_props(g, detect_communities=False)
+    archp = extract_arch_props(arch, in_dim, hidden_dim, num_layers)
     tuner_res = None
     if config is None:
-        tuner_res = tune(g_run, archp.hidden_dim if archp.reduce_dim_first
+        tuner_res = tune(g, archp.hidden_dim if archp.reduce_dim_first
                          else archp.in_dim,
-                         props=props, mode=tune_mode, iters=tune_iters, seed=seed)
+                         props=props, mode=tune_mode, iters=tune_iters,
+                         seed=seed)
         config = tuner_res.best
-
-    # --- §5 group partitioning ---
-    part = partition_graph(g_run, gs=config.gs, gpt=config.gpt, ont=config.ont,
-                           src_win=config.src_win, edge_vals=vals_run)
+    part = partition_graph(g, gs=config.gs, gpt=config.gpt, ont=config.ont,
+                           src_win=config.src_win, edge_vals=edge_vals)
     return AggregationPlan(
-        graph=g_run, partition=part, config=config, graph_props=props,
-        arch=archp, perm=perm, tuner=tuner_res, stats=partition_stats(part),
+        graph=g, partition=part, config=config, graph_props=props,
+        arch=archp, perm=None, tuner=tuner_res, stats=partition_stats(part),
         reduce_dim_first=archp.reduce_dim_first,
     )
 
@@ -106,16 +127,7 @@ def advise(g: CSRGraph, *, arch: str = "gcn", in_dim: int = 128,
 def _permute_edge_vals(g: CSRGraph, perm: np.ndarray,
                        edge_vals: np.ndarray) -> np.ndarray:
     """Carry per-edge values through `CSRGraph.permute`'s exact edge order."""
-    n = g.num_nodes
-    inv = np.empty(n, dtype=np.int64)
-    inv[perm] = np.arange(n)
-    out = np.empty_like(np.asarray(edge_vals, dtype=np.float32))
-    pos = 0
-    for new_v in range(n):
-        old_v = inv[new_v]
-        s, e = g.indptr[old_v], g.indptr[old_v + 1]
-        nbrs = perm[g.indices[s:e]]
-        order = np.argsort(nbrs)
-        out[pos:pos + (e - s)] = np.asarray(edge_vals[s:e], np.float32)[order]
-        pos += e - s
-    return out
+    new_rows = np.repeat(perm, g.degrees)
+    new_cols = perm[g.indices]
+    order = np.lexsort((new_cols, new_rows))
+    return np.asarray(edge_vals, dtype=np.float32)[order]

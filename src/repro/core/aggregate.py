@@ -26,6 +26,19 @@ class PlanExecutor:
         self.dt = plan.config.dt
         self.variant = plan.config.variant
 
+    @classmethod
+    def from_schedule(cls, sched: DeviceSchedule, *, dt: int, variant: str,
+                      backend: str = "pallas_interpret") -> "PlanExecutor":
+        """Plan-less executor over a bare schedule — the serving engine's
+        shared jitted forward rebuilds one per trace from traced arrays."""
+        ex = cls.__new__(cls)
+        ex.plan = None
+        ex.sched = sched
+        ex.backend = backend
+        ex.dt = dt
+        ex.variant = variant
+        return ex
+
     def __call__(self, feat: jax.Array) -> jax.Array:
         """feat: (N, D) in the plan's (renumbered) node order -> (N, D) f32."""
         return _kernel_aggregate(feat, self.sched, dt=self.dt,

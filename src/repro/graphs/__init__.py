@@ -1,6 +1,8 @@
 """Graph substrate: CSR structures, synthetic generators, paper-dataset replicas."""
 from repro.graphs.csr import CSRGraph, from_edges, random_power_law, random_community_graph
 from repro.graphs.datasets import PAPER_DATASETS, make_dataset, dataset_names
+from repro.graphs.subgraph import (BatchedEgo, EgoGraph, batch_egos,
+                                   extract_ego, induced_subgraph, k_hop_nodes)
 
 __all__ = [
     "CSRGraph",
@@ -10,4 +12,10 @@ __all__ = [
     "PAPER_DATASETS",
     "make_dataset",
     "dataset_names",
+    "BatchedEgo",
+    "EgoGraph",
+    "batch_egos",
+    "extract_ego",
+    "induced_subgraph",
+    "k_hop_nodes",
 ]

@@ -65,11 +65,11 @@ class CSRGraph:
         new_indptr = np.zeros(n + 1, dtype=np.int64)
         new_indptr[1:] = np.cumsum(degs + 1)
         new_indices = np.empty(self.num_edges + n, dtype=np.int32)
-        for v in range(n):
-            s, e = self.indptr[v], self.indptr[v + 1]
-            ns, ne = new_indptr[v], new_indptr[v + 1]
-            new_indices[ns] = v
-            new_indices[ns + 1 : ne] = self.indices[s:e]
+        # row v's slot block starts at indptr[v] + v: self-loop first, then
+        # the old neighbors shifted right by (v + 1).
+        new_indices[new_indptr[:-1]] = np.arange(n, dtype=np.int32)
+        rows = np.repeat(np.arange(n, dtype=np.int64), degs)
+        new_indices[np.arange(self.num_edges) + rows + 1] = self.indices
         return CSRGraph(new_indptr, new_indices)
 
     def permute(self, perm: np.ndarray) -> "CSRGraph":
@@ -81,20 +81,14 @@ class CSRGraph:
         """
         n = self.num_nodes
         assert perm.shape == (n,)
-        inv = np.empty(n, dtype=np.int64)
-        inv[perm] = np.arange(n)
-        degs = self.degrees
-        new_degs = degs[inv]
+        new_rows = np.repeat(perm, self.degrees)
+        new_cols = perm[self.indices]
+        order = np.lexsort((new_cols, new_rows))
+        new_degs = np.zeros(n, dtype=np.int64)
+        new_degs[perm] = self.degrees
         new_indptr = np.zeros(n + 1, dtype=np.int64)
         new_indptr[1:] = np.cumsum(new_degs)
-        new_indices = np.empty(self.num_edges, dtype=np.int32)
-        for new_v in range(n):
-            old_v = inv[new_v]
-            s, e = self.indptr[old_v], self.indptr[old_v + 1]
-            nbrs = perm[self.indices[s:e]]
-            nbrs.sort()
-            new_indices[new_indptr[new_v] : new_indptr[new_v + 1]] = nbrs
-        return CSRGraph(new_indptr, new_indices)
+        return CSRGraph(new_indptr, new_cols[order].astype(np.int32))
 
     def to_coo(self) -> tuple[np.ndarray, np.ndarray]:
         rows = np.repeat(np.arange(self.num_nodes, dtype=np.int32), self.degrees)

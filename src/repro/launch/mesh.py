@@ -9,7 +9,15 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_mesh"]
+__all__ = ["make_production_mesh", "make_mesh", "set_mesh"]
+
+
+def set_mesh(mesh: "jax.sharding.Mesh"):
+    """Version-portable mesh context: `jax.set_mesh` on new jax; on older
+    versions `Mesh` is itself the context manager."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -18,12 +26,15 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     `pod` axis carries only data-parallel gradient traffic."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes)
 
 
 def make_mesh(shape: tuple, axes: tuple) -> jax.sharding.Mesh:
-    """Arbitrary mesh with the same Auto axis-type convention."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    """Arbitrary mesh with the Auto axis-type convention (where the
+    installed jax has typed mesh axes; older versions have a single kind)."""
+    shape, axes = tuple(shape), tuple(axes)
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, axes)

@@ -27,7 +27,8 @@ from repro.graphs.csr import CSRGraph
 
 Pytree = Any
 
-__all__ = ["GNNConfig", "gcn_edge_values", "build_gnn", "GNNModel"]
+__all__ = ["GNNConfig", "gcn_edge_values", "build_gnn", "init_gnn_params",
+           "GNNModel"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +103,15 @@ class GNNModel:
                                (jnp.asarray(rows), jnp.asarray(cols)))
         return self._edges_cache
 
+    def rebind(self, plan: AggregationPlan, *,
+               backend: Optional[str] = None) -> "GNNModel":
+        """Same weights, different graph: run this model on another plan
+        (the serving path — a prebuilt model applied to a batched
+        ego-subgraph whose plan came from the plan cache)."""
+        executor = PlanExecutor(plan, backend=backend or self.cfg.backend)
+        return GNNModel(cfg=self.cfg, plan=plan, executor=executor,
+                        params=self.params)
+
     def loss(self, params: Pytree, feat: jax.Array, labels: jax.Array,
              mask: Optional[jax.Array] = None):
         lg = self.logits(params, feat)
@@ -132,6 +142,14 @@ def build_gnn(g: CSRGraph, cfg: GNNConfig, *, key: Optional[jax.Array] = None,
                       reorder=reorder, tune_iters=tune_iters, config=config,
                       seed=seed)
     executor = PlanExecutor(plan, backend=cfg.backend)
+    params = init_gnn_params(cfg, key)
+    return GNNModel(cfg=cfg, plan=plan, executor=executor, params=params)
+
+
+def init_gnn_params(cfg: GNNConfig, key: jax.Array) -> Pytree:
+    """Parameter init alone — the serving engine builds params without ever
+    planning the full resident graph (plans come per-subgraph from the
+    cache)."""
     params = {}
     dims = [cfg.in_dim] + [cfg.hidden_dim] * (cfg.num_layers - 1) + [cfg.num_classes]
     k = key
@@ -153,4 +171,4 @@ def build_gnn(g: CSRGraph, cfg: GNNConfig, *, key: Optional[jax.Array] = None,
                                / np.sqrt(fan_in)).astype(jnp.float32)
             params[f"w{i}b"] = (jax.random.normal(k2, (cfg.hidden_dim, dims[i + 1]))
                                 / np.sqrt(cfg.hidden_dim)).astype(jnp.float32)
-    return GNNModel(cfg=cfg, plan=plan, executor=executor, params=params)
+    return params

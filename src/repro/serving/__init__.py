@@ -1,0 +1,22 @@
+"""GNN inference serving engine.
+
+The paper's preprocessing (extraction, partitioning, design-parameter
+search) is "a one-time cost amortized over many kernel launches" — this
+package is the runtime that does the amortizing: a plan cache keyed by
+graph fingerprints, a micro-batcher that coalesces concurrent node-level
+prediction requests into one batched ego-subgraph inference, and a
+`ServingEngine` front door with latency/throughput accounting.
+"""
+from repro.serving.batcher import MicroBatcher, Request
+from repro.serving.engine import ServingConfig, ServingEngine
+from repro.serving.plan_cache import PlanCache, bucket_pow2, graph_fingerprint
+
+__all__ = [
+    "MicroBatcher",
+    "PlanCache",
+    "Request",
+    "ServingConfig",
+    "ServingEngine",
+    "bucket_pow2",
+    "graph_fingerprint",
+]

@@ -1,0 +1,249 @@
+"""ServingEngine: node-level GNN prediction against a resident graph.
+
+Request path (the subsystem the paper's "one-time cost amortized over many
+kernel launches" premise implies but never builds):
+
+    submit(seed) -> MicroBatcher -> k-hop ego-graph union (or disjoint
+    union) -> shape bucketing -> PlanCache (advisor config + partition +
+    jitted forward reuse) -> batched aggregation kernel -> per-seed logits.
+
+GCN edge values are computed ONCE from the resident graph's degrees and
+sliced into every subgraph, so batched ego inference is numerically
+identical to full-graph inference at the seeds (see `graphs.subgraph`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+from repro.graphs.subgraph import batch_egos, extract_ego, pad_to_nodes
+from repro.models.gnn import GNNConfig, GNNModel, gcn_edge_values, init_gnn_params
+from repro.serving.batcher import MicroBatcher, Request
+from repro.serving.plan_cache import PlanCache, bucket_pow2
+
+__all__ = ["ServingConfig", "ServingEngine"]
+
+_JIT_CACHE_MAX = 128
+
+
+class _ScheduleView:
+    """Duck-typed DeviceSchedule over traced tile arrays + static ints —
+    lets the shared jitted forward close over NOTHING entry-specific (no
+    device arrays pinned by the closure)."""
+
+    def __init__(self, arrs, *, gs, gpt, ont, src_win, num_nodes,
+                 padded_src_rows, padded_out_rows):
+        (self.nbrs, self.edge_val, self.local_node,
+         self.tile_node_block, self.tile_window) = arrs
+        self.gs, self.gpt, self.ont, self.src_win = gs, gpt, ont, src_win
+        self.num_nodes = num_nodes
+        self.padded_src_rows = padded_src_rows
+        self.padded_out_rows = padded_out_rows
+        self.num_tiles = int(self.nbrs.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    hops: Optional[int] = None      # ego-graph radius; default = num_layers
+    max_batch: int = 16             # micro-batch size budget
+    max_wait: Optional[float] = None  # seconds; None = size-only batching
+    batch_mode: str = "union"       # "union" | "disjoint"
+    bucket_shapes: bool = True      # pad node/tile counts to powers of two
+    tune_mode: str = "model"
+    tune_iters: int = 6
+    max_plans: int = 64
+    jit: bool = True
+
+
+@dataclasses.dataclass
+class _EngineStats:
+    latencies: list = dataclasses.field(default_factory=list)
+    batch_sizes: list = dataclasses.field(default_factory=list)
+    sub_nodes: list = dataclasses.field(default_factory=list)
+    compute_s: list = dataclasses.field(default_factory=list)
+    t_first_submit: Optional[float] = None
+    t_last_done: Optional[float] = None
+
+
+class ServingEngine:
+    """Front door: owns the resident graph, features, weights, batcher and
+    plan cache.  Thread-free; callers may drive time explicitly (`now=`)."""
+
+    def __init__(self, graph: CSRGraph, feat: np.ndarray, cfg: GNNConfig, *,
+                 params=None, key: Optional[jax.Array] = None,
+                 serving: Optional[ServingConfig] = None):
+        assert feat.shape == (graph.num_nodes, cfg.in_dim), \
+            (feat.shape, graph.num_nodes, cfg.in_dim)
+        self.graph = graph
+        self.feat = np.ascontiguousarray(feat, dtype=np.float32)
+        self.cfg = cfg
+        self.serving = serving or ServingConfig()
+        self.hops = self.serving.hops or cfg.num_layers
+        self.params = params if params is not None else init_gnn_params(
+            cfg, key if key is not None else jax.random.PRNGKey(0))
+        # resident aggregation graph: GCN folds self-loops + A-hat weights
+        # from FULL-graph degrees; GIN/GAT aggregate the raw graph.
+        if cfg.arch == "gcn":
+            self.src_graph, self.src_vals = gcn_edge_values(graph)
+        else:
+            self.src_graph, self.src_vals = graph, None
+        self.cache = PlanCache(
+            backend=cfg.backend, tune_mode=self.serving.tune_mode,
+            tune_iters=self.serving.tune_iters,
+            max_entries=self.serving.max_plans,
+            bucket_shapes=self.serving.bucket_shapes)
+        self.batcher = MicroBatcher(
+            max_batch=self.serving.max_batch,
+            max_wait=(np.inf if self.serving.max_wait is None
+                      else self.serving.max_wait))
+        self.stats = _EngineStats()
+        self._next_rid = 0
+        # shared jitted forwards, keyed by (agg statics, schedule/feat
+        # shapes): entries in the same shape class reuse one executable —
+        # the payoff of pow2 bucketing.  LRU-bounded: without bucketing
+        # every distinct subgraph shape is a new key.
+        self._jit_cache: "OrderedDict[tuple, object]" = OrderedDict()
+
+    # ---------------- synchronous batch inference ----------------
+
+    def _extract(self, seeds: Sequence[int]):
+        if self.serving.batch_mode == "disjoint" and len(seeds) > 1:
+            egos = [extract_ego(self.src_graph, [s], self.hops, self.src_vals)
+                    for s in seeds]
+            be = batch_egos(egos)
+            return be.graph, be.nodes, be.seed_local, be.edge_vals
+        ego = extract_ego(self.src_graph, seeds, self.hops, self.src_vals)
+        return ego.graph, ego.nodes, ego.seed_local, ego.edge_vals
+
+    def serve_batch(self, seeds: Sequence[int]) -> np.ndarray:
+        """Batched inference for `seeds` -> (len(seeds), num_classes)."""
+        t0 = time.perf_counter()
+        cfg = self.cfg
+        sub, nodes, seed_local, vals = self._extract(seeds)
+        n_real = sub.num_nodes
+        if self.serving.bucket_shapes:
+            sub = pad_to_nodes(sub, bucket_pow2(n_real))
+        ent = self.cache.get_or_build(
+            sub, arch=cfg.arch, in_dim=cfg.in_dim, hidden_dim=cfg.hidden_dim,
+            num_layers=cfg.num_layers, edge_vals=vals)
+        if ent.apply_fn is None:
+            ent.apply_fn = self._make_apply(ent)
+        feat_sub = np.zeros((sub.num_nodes, cfg.in_dim), np.float32)
+        feat_sub[:n_real] = self.feat[nodes]
+        out = np.asarray(jax.block_until_ready(
+            ent.apply_fn(self.params, jnp.asarray(feat_sub))))
+        self.stats.batch_sizes.append(len(seeds))
+        self.stats.sub_nodes.append(n_real)
+        self.stats.compute_s.append(time.perf_counter() - t0)
+        return out[np.asarray(seed_local)]
+
+    def _make_apply(self, ent):
+        """Build the forward for a cache entry.
+
+        GCN/GIN: the jitted forward takes the schedule tensors as ARGUMENTS
+        (not closure constants), so one executable is shared by every cache
+        entry whose schedule/feature shapes and agg statics match — XLA
+        neither re-traces nor constant-folds per subgraph.  GAT's dynamic
+        edge tensors vary per subgraph in unbucketed (E,) shapes, so it
+        keeps a per-entry jit.
+        """
+        cfg = self.cfg
+        if cfg.arch == "gat" or not self.serving.jit:
+            model = GNNModel(cfg=cfg, plan=ent.plan, executor=ent.executor,
+                             params=self.params)
+            fn = jax.jit(model.logits) if self.serving.jit else model.logits
+            return fn
+
+        sched = ent.executor.sched
+        acfg = ent.plan.config
+        arrs = (sched.nbrs, sched.edge_val, sched.local_node,
+                sched.tile_node_block, sched.tile_window)
+        key = (acfg.gs, acfg.gpt, acfg.ont, acfg.src_win, acfg.dt,
+               acfg.variant, cfg.backend, sched.num_nodes,
+               tuple(a.shape for a in arrs))
+        shared = self._jit_cache.get(key)
+        if shared is None:
+            statics = dict(gs=acfg.gs, gpt=acfg.gpt, ont=acfg.ont,
+                           src_win=acfg.src_win, num_nodes=sched.num_nodes,
+                           padded_src_rows=sched.padded_src_rows,
+                           padded_out_rows=sched.padded_out_rows)
+
+            def apply(params, feat, arrs, _dt=acfg.dt, _variant=acfg.variant):
+                from repro.core.aggregate import PlanExecutor
+                ex = PlanExecutor.from_schedule(
+                    _ScheduleView(arrs, **statics), dt=_dt, variant=_variant,
+                    backend=cfg.backend)
+                m = GNNModel(cfg=cfg, plan=None, executor=ex, params=None)
+                return m.logits(params, feat)
+
+            shared = jax.jit(apply)
+            self._jit_cache[key] = shared
+            while len(self._jit_cache) > _JIT_CACHE_MAX:
+                self._jit_cache.popitem(last=False)
+        else:
+            self._jit_cache.move_to_end(key)
+        return lambda params, feat, _arrs=arrs: shared(params, feat, _arrs)
+
+    # ---------------- request API (micro-batched) ----------------
+
+    def submit(self, seed: int, now: Optional[float] = None) -> Request:
+        now = time.perf_counter() if now is None else now
+        if self.stats.t_first_submit is None:
+            self.stats.t_first_submit = now
+        req = Request(rid=self._next_rid, seed=int(seed), t_submit=now)
+        self._next_rid += 1
+        self.batcher.put(req)
+        return req
+
+    def step(self, now: Optional[float] = None, *,
+             force: bool = False) -> list[Request]:
+        """Fire every due micro-batch (all pending ones when `force`)."""
+        done: list[Request] = []
+        while True:
+            t = time.perf_counter() if now is None else now
+            if not (self.batcher.ready(t)
+                    or (force and self.batcher.pending())):
+                break
+            batch = self.batcher.pop()
+            out = self.serve_batch([r.seed for r in batch])
+            t_done = time.perf_counter() if now is None else now
+            for i, r in enumerate(batch):
+                r.result = out[i]
+                r.t_done = t_done
+                self.stats.latencies.append(r.latency)
+            self.stats.t_last_done = t_done
+            done.extend(batch)
+        return done
+
+    def run_trace(self, seeds: Sequence[int]) -> list[Request]:
+        """Replay a request trace through the micro-batcher (wall clock)."""
+        reqs = []
+        for s in seeds:
+            reqs.append(self.submit(int(s)))
+            self.step()
+        self.step(force=True)
+        return reqs
+
+    def summary(self) -> dict:
+        st = self.stats
+        lat = np.asarray(st.latencies, dtype=np.float64)
+        wall = ((st.t_last_done - st.t_first_submit)
+                if st.latencies and st.t_last_done is not None else 0.0)
+        return {
+            "requests": len(lat),
+            "batches": len(st.batch_sizes),
+            "req_per_s": len(lat) / wall if wall > 0 else float("nan"),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3) if len(lat) else float("nan"),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3) if len(lat) else float("nan"),
+            "batch_occupancy": (float(np.mean(st.batch_sizes)) / self.serving.max_batch
+                                if st.batch_sizes else 0.0),
+            "avg_sub_nodes": float(np.mean(st.sub_nodes)) if st.sub_nodes else 0.0,
+            "cache": self.cache.stats(),
+        }

@@ -1,0 +1,190 @@
+"""Plan cache: amortize advisor runs across serving requests.
+
+Two levels, from cheapest to most general:
+
+  * **exact level** — blake2b over the (bucketed) subgraph's CSR bytes +
+    edge values + arch key -> a ready `CacheEntry` (plan, device-resident
+    schedule, and the engine-installed jitted forward).  Hot seeds and
+    repeated batches skip ALL preprocessing.
+  * **config level** — a coarse `graph_fingerprint` (pow2-bucketed
+    node/edge counts + quantized log-degree histogram + arch key) ->
+    `AggConfig`, so the §7 tuner runs once per workload *shape class*;
+    a fingerprint hit still rebuilds the (cheap, vectorized) partition via
+    `core.advisor.plan_for` but skips the evolutionary search.
+
+Shape bucketing: subgraph node counts are padded to powers of two before
+partitioning (`graphs.subgraph.pad_to_nodes`) and tile counts are padded to
+powers of two here, so `group_aggregate_pallas` / the XLA executor see a
+small recurring set of operand shapes and their jit caches actually hit.
+Padded tiles carry all-zero edge values (the partitioner's own padding
+convention), so they contribute nothing to any output row.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core.advisor import AggregationPlan, plan_for
+from repro.core.aggregate import PlanExecutor
+from repro.core.model import AggConfig
+from repro.core.partition import GroupPartition
+from repro.graphs.csr import CSRGraph
+
+__all__ = [
+    "CacheEntry",
+    "PlanCache",
+    "bucket_pow2",
+    "graph_fingerprint",
+    "graph_key",
+    "pad_partition_tiles",
+]
+
+
+def bucket_pow2(x: int, lo: int = 1) -> int:
+    """Smallest power of two >= max(x, lo)."""
+    x = max(int(x), lo)
+    return 1 << (x - 1).bit_length()
+
+
+def graph_fingerprint(g: CSRGraph, arch_key: tuple = ()) -> tuple:
+    """Coarse workload signature: graphs that share it get the same tuned
+    config.  Pow2 size buckets + a 16-bin log2-degree histogram quantized to
+    1/4ths of the working node count, so near-identical ego-batches collide.
+    Isolated nodes are excluded — they carry no aggregation work and their
+    count is mostly shape-bucketing pad."""
+    degs = g.degrees
+    degs = degs[degs > 0]
+    hist = (np.bincount(np.minimum(np.log2(degs).astype(np.int64), 15),
+                        minlength=16)
+            if len(degs) else np.zeros(16, np.int64))
+    frac = tuple(int(x) for x in
+                 np.round(4.0 * hist / max(len(degs), 1)).astype(np.int64))
+    return (bucket_pow2(g.num_nodes), bucket_pow2(max(g.num_edges, 1)),
+            frac, tuple(arch_key))
+
+
+def graph_key(g: CSRGraph, edge_vals: Optional[np.ndarray],
+              arch_key: tuple = ()) -> tuple:
+    """Exact identity of a (subgraph, edge values, arch) triple."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.ascontiguousarray(g.indptr).tobytes())
+    h.update(np.ascontiguousarray(g.indices).tobytes())
+    if edge_vals is not None:
+        h.update(np.ascontiguousarray(edge_vals, dtype=np.float32).tobytes())
+    return (h.hexdigest(), tuple(arch_key))
+
+
+def pad_partition_tiles(p: GroupPartition, target_tiles: int) -> GroupPartition:
+    """Append no-op tiles (zero edge values, last tile's block/window) until
+    num_tiles == target_tiles.  edge_slot/edge_pos stay valid: original flat
+    group slots are unchanged, new slots only appended."""
+    T = p.num_tiles
+    if target_tiles <= T or T == 0:
+        return p
+    pad = target_tiles - T
+    win = int(p.tile_window[-1])
+    blk = int(p.tile_node_block[-1])
+    return dataclasses.replace(
+        p,
+        nbrs=np.concatenate(
+            [p.nbrs, np.full((pad, p.gpt, p.gs), win * p.src_win, np.int32)]),
+        edge_val=np.concatenate(
+            [p.edge_val, np.zeros((pad, p.gpt, p.gs), np.float32)]),
+        local_node=np.concatenate(
+            [p.local_node, np.zeros((pad, p.gpt), np.int32)]),
+        tile_node_block=np.concatenate(
+            [p.tile_node_block, np.full(pad, blk, np.int32)]),
+        tile_window=np.concatenate(
+            [p.tile_window, np.full(pad, win, np.int32)]),
+    )
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    plan: AggregationPlan
+    executor: PlanExecutor
+    apply_fn: Optional[Callable] = None   # engine-installed jitted forward
+    hits: int = 0
+    extras: dict = dataclasses.field(default_factory=dict)
+
+
+class PlanCache:
+    """LRU plan cache + fingerprint->config memo (see module docstring)."""
+
+    def __init__(self, *, backend: str = "xla", tune_mode: str = "model",
+                 tune_iters: int = 8, max_entries: int = 64,
+                 bucket_shapes: bool = True, seed: int = 0):
+        self.backend = backend
+        self.tune_mode = tune_mode
+        self.tune_iters = tune_iters
+        self.max_entries = max_entries
+        self.bucket_shapes = bucket_shapes
+        self.seed = seed
+        self._plans: "OrderedDict[tuple, CacheEntry]" = OrderedDict()
+        self._configs: dict[tuple, AggConfig] = {}
+        self.exact_hits = 0
+        self.config_hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get_or_build(self, g: CSRGraph, *, arch: str, in_dim: int,
+                     hidden_dim: int, num_layers: int,
+                     edge_vals: Optional[np.ndarray] = None) -> CacheEntry:
+        arch_key = (arch, in_dim, hidden_dim, num_layers)
+        key = graph_key(g, edge_vals, arch_key)
+        ent = self._plans.get(key)
+        if ent is not None:
+            self._plans.move_to_end(key)
+            self.exact_hits += 1
+            ent.hits += 1
+            return ent
+
+        fp = graph_fingerprint(g, arch_key)
+        config = self._configs.get(fp)
+        if config is not None:
+            self.config_hits += 1
+        else:
+            self.misses += 1
+        plan = plan_for(g, arch=arch, in_dim=in_dim, hidden_dim=hidden_dim,
+                        num_layers=num_layers, edge_vals=edge_vals,
+                        config=config, tune_mode=self.tune_mode,
+                        tune_iters=self.tune_iters, seed=self.seed)
+        if config is None:
+            self._configs[fp] = plan.config
+        if self.bucket_shapes:
+            part = pad_partition_tiles(
+                plan.partition, bucket_pow2(plan.partition.num_tiles))
+            plan = dataclasses.replace(plan, partition=part)
+        ent = CacheEntry(plan=plan,
+                         executor=PlanExecutor(plan, backend=self.backend))
+        self._plans[key] = ent
+        while len(self._plans) > self.max_entries:
+            self._plans.popitem(last=False)
+            self.evictions += 1
+        return ent
+
+    @property
+    def num_plans(self) -> int:
+        return len(self._plans)
+
+    @property
+    def num_configs(self) -> int:
+        return len(self._configs)
+
+    def stats(self) -> dict:
+        total = self.exact_hits + self.config_hits + self.misses
+        hits = self.exact_hits + self.config_hits
+        return {
+            "lookups": total,
+            "exact_hits": self.exact_hits,
+            "config_hits": self.config_hits,
+            "misses": self.misses,
+            "hit_rate": hits / total if total else 0.0,
+            "plans": self.num_plans,
+            "configs": self.num_configs,
+            "evictions": self.evictions,
+        }

@@ -1,7 +1,7 @@
 """Property tests for the group partitioner (paper §5.1 invariants)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.partition import partition_graph, partition_stats
 from repro.graphs.csr import random_community_graph, random_power_law

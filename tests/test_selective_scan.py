@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels.ref import selective_scan_ref
 from repro.kernels.selective_scan import selective_scan_pallas

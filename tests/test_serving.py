@@ -1,0 +1,227 @@
+"""Serving subsystem: ego-graph extraction vs BFS reference, disjoint-union
+batching == single-request inference, plan-cache hit/miss behavior, and the
+end-to-end engine against full-graph inference."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.csr import CSRGraph, grid_graph, random_power_law
+from repro.graphs.subgraph import (batch_egos, extract_ego, induced_subgraph,
+                                   k_hop_nodes, pad_to_nodes)
+from repro.models.gnn import GNNConfig, build_gnn
+from repro.serving import ServingConfig, ServingEngine
+from repro.serving.plan_cache import (PlanCache, bucket_pow2,
+                                      graph_fingerprint, pad_partition_tiles)
+
+
+# ---------------------------------------------------------------- extraction
+
+def _bfs_reference(g, seeds, k):
+    """Pure-Python BFS along CSR rows (the in-neighbor closure)."""
+    dist = {int(s): 0 for s in np.atleast_1d(seeds)}
+    frontier = list(dist)
+    for d in range(1, k + 1):
+        nxt = []
+        for v in frontier:
+            for u in g.neighbors(v):
+                if int(u) not in dist:
+                    dist[int(u)] = d
+                    nxt.append(int(u))
+        frontier = nxt
+    return np.array(sorted(dist)), dist
+
+
+def test_k_hop_matches_bfs_on_grid():
+    g = grid_graph(9, 11)
+    for seeds, k in [([0], 1), ([0], 2), ([17], 3), ([0, 98], 2), ([5], 0)]:
+        got = k_hop_nodes(g, np.array(seeds), k)
+        want, _ = _bfs_reference(g, np.array(seeds), k)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_k_hop_matches_bfs_on_power_law():
+    g = random_power_law(300, 5.0, seed=4)
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        seeds = rng.integers(0, g.num_nodes, size=3)
+        k = int(rng.integers(1, 4))
+        got = k_hop_nodes(g, seeds, k)
+        want, _ = _bfs_reference(g, seeds, k)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_induced_subgraph_edges_match_brute_force():
+    g = random_power_law(200, 4.0, seed=1)
+    ev = np.random.default_rng(0).standard_normal(g.num_edges).astype(np.float32)
+    nodes = np.unique(np.random.default_rng(1).integers(0, 200, size=60))
+    sub, sub_ev = induced_subgraph(g, nodes, ev)
+    assert sub.num_nodes == len(nodes)
+    local = {int(v): i for i, v in enumerate(nodes)}
+    pos = 0
+    for i, v in enumerate(nodes):
+        want = []
+        for j, u in enumerate(g.neighbors(v)):
+            if int(u) in local:
+                want.append((local[int(u)], ev[g.indptr[v] + j]))
+        got_nbrs = sub.neighbors(i)
+        assert [w[0] for w in want] == list(got_nbrs)
+        np.testing.assert_array_equal(
+            sub_ev[pos:pos + len(want)], np.array([w[1] for w in want], np.float32))
+        pos += len(want)
+
+
+def test_extract_ego_seed_map_and_pad():
+    g = grid_graph(6, 6)
+    ego = extract_ego(g, [7, 14], 2)
+    np.testing.assert_array_equal(ego.nodes[ego.seed_local], [7, 14])
+    gp = pad_to_nodes(ego.graph, bucket_pow2(ego.graph.num_nodes))
+    assert gp.num_nodes == bucket_pow2(ego.graph.num_nodes)
+    assert gp.num_edges == ego.graph.num_edges
+    np.testing.assert_array_equal(gp.indices, ego.graph.indices)
+
+
+# ---------------------------------------------------- disjoint-union batching
+
+def test_disjoint_union_equals_single_request_inference(rng):
+    g = random_power_law(250, 5.0, seed=2)
+    cfg = GNNConfig(arch="gcn", in_dim=8, hidden_dim=8, num_classes=3,
+                    num_layers=2, backend="xla")
+    model = build_gnn(g, cfg, reorder="off", tune_iters=2)
+    feat = rng.standard_normal((g.num_nodes, 8)).astype(np.float32)
+    full = np.asarray(model.logits(model.params, jnp.asarray(feat)))
+
+    from repro.models.gnn import gcn_edge_values
+    g2, vals = gcn_edge_values(g)
+    seeds = [3, 99, 200, 42]
+    egos = [extract_ego(g2, [s], cfg.num_layers, vals) for s in seeds]
+    be = batch_egos(egos)
+    # block-diagonal structure: per-ego blocks are disjoint
+    assert be.graph.num_nodes == sum(e.graph.num_nodes for e in egos)
+    np.testing.assert_array_equal(be.seed_owner, np.arange(len(seeds)))
+
+    from repro.core.advisor import plan_for
+    plan = plan_for(be.graph, arch="gcn", in_dim=8, hidden_dim=8,
+                    num_layers=2, edge_vals=be.edge_vals, tune_iters=2)
+    batched = model.rebind(plan)
+    feat_b = jnp.asarray(feat[be.nodes])
+    out_b = np.asarray(batched.logits(model.params, feat_b))[be.seed_local]
+
+    for i, (s, ego) in enumerate(zip(seeds, egos)):
+        sp = plan_for(ego.graph, arch="gcn", in_dim=8, hidden_dim=8,
+                      num_layers=2, edge_vals=ego.edge_vals, tune_iters=2)
+        single = model.rebind(sp)
+        out_s = np.asarray(
+            single.logits(model.params, jnp.asarray(feat[ego.nodes])))
+        np.testing.assert_allclose(out_b[i], out_s[ego.seed_local[0]],
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(out_b[i], full[s], atol=1e-5, rtol=1e-5)
+
+
+# ----------------------------------------------------------------- plan cache
+
+def test_bucket_pow2():
+    assert [bucket_pow2(x) for x in [0, 1, 2, 3, 5, 8, 1000]] == \
+        [1, 1, 2, 4, 8, 8, 1024]
+
+
+def test_plan_cache_exact_and_config_hits():
+    cache = PlanCache(backend="xla", tune_iters=2)
+    g = random_power_law(120, 4.0, seed=0)
+    dims = dict(arch="gin", in_dim=8, hidden_dim=8, num_layers=2)
+    e1 = cache.get_or_build(g, **dims)
+    assert cache.stats()["misses"] == 1
+    e2 = cache.get_or_build(g, **dims)          # identical graph -> exact hit
+    assert e2 is e1 and cache.exact_hits == 1
+    # same degree structure, different seed -> config-level hit (tuner skipped)
+    g3 = random_power_law(120, 4.0, seed=7)
+    if graph_fingerprint(g3, tuple(dims.values())) == \
+            graph_fingerprint(g, tuple(dims.values())):
+        e3 = cache.get_or_build(g3, **dims)
+        assert cache.config_hits >= 1
+        assert e3.plan.config == e1.plan.config and e3 is not e1
+    # wildly different graph -> miss with its own config
+    g4 = random_power_law(2000, 12.0, seed=1)
+    cache.get_or_build(g4, **dims)
+    st = cache.stats()
+    assert st["misses"] == 2 and st["hit_rate"] > 0
+
+
+def test_plan_cache_lru_eviction():
+    cache = PlanCache(backend="xla", tune_iters=2, max_entries=2)
+    dims = dict(arch="gin", in_dim=4, hidden_dim=4, num_layers=1)
+    graphs = [random_power_law(60 + 20 * i, 3.0, seed=i) for i in range(3)]
+    for g in graphs:
+        cache.get_or_build(g, **dims)
+    assert cache.num_plans == 2 and cache.evictions == 1
+    cache.get_or_build(graphs[0], **dims)       # evicted -> rebuilt, not a hit
+    assert cache.exact_hits == 0
+
+
+def test_pad_partition_tiles_is_noop_numerically(rng):
+    from repro.core.partition import partition_graph
+    from repro.kernels.ops import DeviceSchedule, aggregate
+    g = random_power_law(150, 5.0, seed=3)
+    p = partition_graph(g, gs=4, gpt=8, ont=8, src_win=64)
+    pp = pad_partition_tiles(p, bucket_pow2(p.num_tiles) * 2)
+    assert pp.num_tiles == bucket_pow2(p.num_tiles) * 2
+    feat = rng.standard_normal((g.num_nodes, 12)).astype(np.float32)
+    out = aggregate(jnp.asarray(feat), DeviceSchedule(p), backend="xla")
+    out_p = aggregate(jnp.asarray(feat), DeviceSchedule(pp), backend="xla")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_p),
+                               atol=1e-6, rtol=1e-6)
+
+
+# -------------------------------------------------------------------- engine
+
+@pytest.mark.parametrize("arch", ["gcn", "gin", "gat"])
+def test_engine_matches_full_graph_inference(arch, rng):
+    g = random_power_law(400, 5.0, seed=5)
+    cfg = GNNConfig(arch=arch, in_dim=8, hidden_dim=8, num_classes=4,
+                    num_layers=2, backend="xla")
+    model = build_gnn(g, cfg, reorder="off", tune_iters=2)
+    feat = rng.standard_normal((g.num_nodes, 8)).astype(np.float32)
+    full = np.asarray(model.logits(model.params, jnp.asarray(feat)))
+    eng = ServingEngine(g, feat, cfg, params=model.params,
+                        serving=ServingConfig(max_batch=8, tune_iters=2))
+    seeds = rng.integers(0, g.num_nodes, size=13)
+    out = eng.serve_batch(list(seeds))
+    np.testing.assert_allclose(out, full[seeds], atol=1e-5, rtol=1e-5)
+
+
+def test_engine_trace_batches_and_stats(rng):
+    g = random_power_law(300, 4.0, seed=6)
+    cfg = GNNConfig(arch="gcn", in_dim=6, hidden_dim=6, num_classes=3,
+                    num_layers=2, backend="xla")
+    feat = rng.standard_normal((g.num_nodes, 6)).astype(np.float32)
+    eng = ServingEngine(g, feat, cfg,
+                        serving=ServingConfig(max_batch=4, tune_iters=2))
+    trace = list(rng.integers(0, g.num_nodes, size=10))
+    reqs = eng.run_trace(trace)
+    assert all(r.result is not None and r.t_done >= r.t_submit for r in reqs)
+    s = eng.summary()
+    assert s["requests"] == 10
+    assert s["batches"] == 3                    # 4 + 4 + 2 (forced flush)
+    assert s["cache"]["lookups"] == 3
+    assert 0 <= s["batch_occupancy"] <= 1
+    # hot repeated batch -> exact plan-cache hit and identical results
+    out1 = eng.serve_batch([trace[0]])
+    out2 = eng.serve_batch([trace[0]])
+    assert eng.cache.exact_hits >= 1
+    np.testing.assert_array_equal(out1, out2)
+
+
+def test_engine_disjoint_mode_matches_union(rng):
+    g = random_power_law(200, 4.0, seed=8)
+    cfg = GNNConfig(arch="gcn", in_dim=6, hidden_dim=6, num_classes=3,
+                    num_layers=2, backend="xla")
+    feat = rng.standard_normal((g.num_nodes, 6)).astype(np.float32)
+    key = jax.random.PRNGKey(3)
+    seeds = [5, 60, 121]
+    outs = []
+    for mode in ["union", "disjoint"]:
+        eng = ServingEngine(g, feat, cfg, key=key,
+                            serving=ServingConfig(max_batch=8, tune_iters=2,
+                                                  batch_mode=mode))
+        outs.append(eng.serve_batch(seeds))
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-5, rtol=1e-5)
