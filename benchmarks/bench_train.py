@@ -1,0 +1,85 @@
+"""Training-step benchmark: fwd+bwd wall time through the advisor path.
+
+For each arch (GCN static edge values, GAT dynamic edge values) times one
+jitted optimizer step — `jax.value_and_grad` of the full model loss — on the
+pure-XLA reference backend vs the Pallas kernel (interpret on CPU, compiled
+when a TPU is attached).  The Pallas backward pass is the transposed-schedule
+kernel installed by the custom VJP (docs/training.md).
+
+    PYTHONPATH=src python -m benchmarks.bench_train [--smoke]
+
+CSV contract per line: name,us_per_call,derived (us_per_call = per step).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def run(smoke: bool = True):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import emit, time_fn
+    from repro.graphs.csr import random_power_law
+    from repro.models.gnn import GNNConfig, build_gnn, make_gnn_train_step
+    from repro.optim.adamw import AdamWConfig, adamw_init
+
+    if smoke:
+        num_nodes, in_dim, hidden, iters = 600, 16, 16, 2
+    else:
+        num_nodes, in_dim, hidden, iters = 20_000, 64, 64, 5
+
+    backends = ["xla", "pallas_interpret"]
+    if jax.default_backend() == "tpu":
+        backends.append("pallas")
+
+    g = random_power_law(num_nodes, 6.0, seed=0)
+    rng = np.random.default_rng(0)
+    feat = rng.standard_normal((g.num_nodes, in_dim)).astype(np.float32)
+    labels = rng.integers(0, 4, g.num_nodes).astype(np.int32)
+
+    for arch in ["gcn", "gat"]:
+        ref_step = None
+        for backend in backends:
+            cfg = GNNConfig(arch=arch, in_dim=in_dim, hidden_dim=hidden,
+                            num_classes=4, num_layers=2, backend=backend)
+            # xla baseline = natively differentiated reference; pallas rows
+            # carry the transposed-schedule custom VJP
+            model = build_gnn(g, cfg, reorder="off",
+                              tune_iters=2 if smoke else 4,
+                              with_backward=(backend != "xla"))
+            opt = AdamWConfig(lr=1e-3)
+            step_fn = make_gnn_train_step(model, opt)
+            batch = {"feat": jnp.asarray(feat), "labels": jnp.asarray(labels)}
+            state = (model.params, adamw_init(model.params))
+
+            def one_step(state=state, step_fn=step_fn, batch=batch):
+                new_state, metrics = step_fn(state, batch)
+                return metrics["loss"]
+
+            t = time_fn(one_step, warmup=1, iters=iters)
+            if backend == "xla":
+                ref_step = t
+                speed = ""
+            else:
+                speed = (f";vs_xla={ref_step / t:.2f}x"
+                         if ref_step is not None else "")
+            pb = model.plan.partition_bwd
+            emit(f"train_step/{arch}/{backend}/n{num_nodes}", t * 1e6,
+                 f"tiles={model.plan.stats['tiles']};"
+                 f"bwd_tiles={pb.num_tiles if pb is not None else '-'}{speed}")
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny graph + few iters (CI budget)")
+    args = p.parse_args(argv)
+    run(smoke=args.smoke)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,6 +20,7 @@ SECTIONS = [
     ("hidden-dim (Fig. 13)", "benchmarks.bench_hidden_dim"),
     ("straggler fleet sim (runtime)", "benchmarks.bench_straggler"),
     ("serving engine (smoke)", "benchmarks.bench_serve"),
+    ("train step fwd+bwd (smoke)", "benchmarks.bench_train"),
     ("roofline (§Roofline)", "benchmarks.roofline"),
 ]
 

@@ -2,19 +2,25 @@
 through the full GNNAdvisor pipeline (extract -> tune -> renumber ->
 group-schedule -> train), with checkpoint/restart fault tolerance.
 
-    PYTHONPATH=src python examples/train_gcn.py [--steps 300] [--dataset cora]
+Training runs through the advisor path on any backend: with
+``--backend pallas_interpret`` (or ``pallas`` on a TPU) the forward pass is
+the group-aggregate kernel and the backward pass is the SAME kernel over the
+transposed schedule (the custom VJP installed by `repro.kernels.ops`).
+
+    PYTHONPATH=src python examples/train_gcn.py [--steps 300] [--dataset cora] \
+        [--backend pallas_interpret]
 """
 import argparse
 import os
 import tempfile
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.graphs.datasets import make_dataset
-from repro.models.gnn import GNNConfig, build_gnn
-from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.models.gnn import (GNNConfig, build_gnn, make_gnn_train_step,
+                              planted_labels)
+from repro.optim.adamw import AdamWConfig, adamw_init, cosine_schedule
 from repro.runtime.trainer import FailureInjector, Trainer, TrainerConfig
 
 
@@ -23,22 +29,21 @@ def main():
     ap.add_argument("--dataset", default="cora")
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--max-nodes", type=int, default=2708)
+    ap.add_argument("--backend", default="xla",
+                    choices=["xla", "pallas", "pallas_interpret"])
+    ap.add_argument("--arch", default="gcn", choices=["gcn", "gin", "gat"])
     ap.add_argument("--fail-at", type=int, default=150,
                     help="inject a simulated crash at this step (-1 = off)")
     args = ap.parse_args()
 
     g, spec, feat = make_dataset(args.dataset, max_nodes=args.max_nodes, seed=0)
-    # planted labels: community id via metis-free trick — use degree+feature
-    # clusters; here: labels from a random teacher GCN for a learnable task
-    rng = np.random.default_rng(0)
     in_dim = min(spec.dim, 128)
     feat = feat[:, :in_dim].astype(np.float32)
 
-    cfg = GNNConfig(arch="gcn", in_dim=in_dim, hidden_dim=32,
-                    num_classes=spec.num_classes, num_layers=2, backend="xla")
-    teacher = build_gnn(g, cfg, reorder="off", tune_iters=2, seed=7)
-    labels = np.asarray(
-        teacher.logits(teacher.params, jnp.asarray(feat)).argmax(-1))
+    cfg = GNNConfig(arch=args.arch, in_dim=in_dim, hidden_dim=32,
+                    num_classes=spec.num_classes, num_layers=2,
+                    backend=args.backend)
+    labels = planted_labels(g, cfg, feat)
     print(f"[train_gcn] {args.dataset}: {g.num_nodes} nodes, "
           f"{g.num_edges} edges, {spec.num_classes} classes")
 
@@ -46,34 +51,29 @@ def main():
     print(f"[train_gcn] advisor: gs={model.plan.config.gs} "
           f"gpt={model.plan.config.gpt} src_win={model.plan.config.src_win} "
           f"renumbered={model.plan.perm is not None} "
-          f"tiles={model.plan.stats['tiles']}")
+          f"tiles={model.plan.stats['tiles']} backend={args.backend} "
+          f"bwd_tiles={model.plan.partition_bwd.num_tiles if model.plan.partition_bwd is not None else '-'}")
     featp = jnp.asarray(model.plan.renumber_features(feat))
-    if model.plan.perm is not None:
-        inv = np.empty(g.num_nodes, np.int64)
-        inv[model.plan.perm] = np.arange(g.num_nodes)
-        labp = jnp.asarray(labels[inv])
-    else:
-        labp = jnp.asarray(labels)
+    labp = jnp.asarray(model.plan.renumber_features(labels))
 
     opt = AdamWConfig(lr=1e-2, schedule=cosine_schedule(20, args.steps))
-
-    @jax.jit
-    def step_fn(state, batch):
-        params, opt_state = state
-        (loss, metrics), grads = jax.value_and_grad(
-            model.loss, has_aux=True)(params, featp, labp)
-        params, opt_state, om = adamw_update(opt, grads, opt_state, params)
-        return (params, opt_state), {**metrics, **om}
+    step_fn = make_gnn_train_step(model, opt)
+    batch = {"feat": featp, "labels": labp}
 
     ckpt = os.path.join(tempfile.gettempdir(), "repro_gcn_ckpt")
     trainer = Trainer(
         TrainerConfig(ckpt_dir=ckpt, ckpt_every=50, log_every=50),
-        step_fn, lambda step: {}, (model.params, adamw_init(model.params)),
+        step_fn, lambda step: batch, (model.params, adamw_init(model.params)),
         injector=FailureInjector([args.fail_at] if args.fail_at >= 0 else []))
     (params, _) = trainer.run(args.steps)
+    hist = trainer.metrics_history
+    if hist:
+        print(f"[train_gcn] loss: step0={hist[0]['loss']:.4f} -> "
+              f"step{len(hist)}={hist[-1]['loss']:.4f}")
     loss, metrics = model.loss(params, featp, labp)
     print(f"[train_gcn] final loss={float(loss):.4f} "
           f"accuracy={float(metrics['accuracy']):.3f} "
+          f"avg_step={trainer.avg_step_time()*1e3:.1f}ms "
           f"(survived {len(trainer.injector.fired)} injected failure(s))")
 
 

@@ -16,7 +16,8 @@ import numpy as np
 from repro.core.extractor import (GNNArchProps, GraphProps, extract_arch_props,
                                   extract_graph_props)
 from repro.core.model import AggConfig, KernelModel
-from repro.core.partition import GroupPartition, partition_graph, partition_stats
+from repro.core.partition import (GroupPartition, partition_graph,
+                                  partition_stats, transpose_graph)
 from repro.core.reorder import apply_renumbering, renumber
 from repro.core.tuner import TunerResult, tune
 from repro.graphs.csr import CSRGraph
@@ -37,6 +38,12 @@ class AggregationPlan:
     tuner: Optional[TunerResult]
     stats: dict
     reduce_dim_first: bool             # §4.2 aggregation placement decision
+    # training support (plan_for(with_backward=True)): the partition of the
+    # TRANSPOSED graph under the SAME config — the aggregation kernel's
+    # backward-pass schedule — plus the edge permutation mapping the
+    # transposed CSR's edge order back to the forward graph's.
+    partition_bwd: Optional[GroupPartition] = None
+    edge_perm_bwd: Optional[np.ndarray] = None
 
     def renumber_features(self, feat: np.ndarray) -> np.ndarray:
         if self.perm is None:
@@ -57,7 +64,8 @@ def advise(g: CSRGraph, *, arch: str = "gcn", in_dim: int = 128,
            edge_vals: Optional[np.ndarray] = None,
            reorder: str = "auto",        # "auto" | "on" | "off"
            tune_mode: str = "model", tune_iters: int = 12,
-           config: Optional[AggConfig] = None, seed: int = 0) -> AggregationPlan:
+           config: Optional[AggConfig] = None, seed: int = 0,
+           with_backward: bool = False) -> AggregationPlan:
     """Run the full GNNAdvisor decision loop for one input.
 
     reorder="auto" applies §6.1 renumbering unless the input already shows
@@ -87,7 +95,7 @@ def advise(g: CSRGraph, *, arch: str = "gcn", in_dim: int = 128,
     plan = plan_for(g_run, arch=arch, in_dim=in_dim, hidden_dim=hidden_dim,
                     num_layers=num_layers, edge_vals=vals_run, config=config,
                     tune_mode=tune_mode, tune_iters=tune_iters, seed=seed,
-                    props=props)
+                    props=props, with_backward=with_backward)
     plan.perm = perm
     return plan
 
@@ -98,12 +106,34 @@ def plan_for(g: CSRGraph, *, arch: str = "gcn", in_dim: int = 128,
              config: Optional[AggConfig] = None,
              tune_mode: str = "model", tune_iters: int = 12,
              seed: int = 0, props: Optional[GraphProps] = None,
-             ) -> AggregationPlan:
+             with_backward: bool = False) -> AggregationPlan:
     """Pure planning: props -> (tune unless `config` given) -> partition.
 
     Unlike `advise` this never renumbers or mutates the input — it is the
     entry point the serving plan cache calls with memoized configs so a plan
     for a bucketed subgraph can be rebuilt without re-running the tuner.
+
+    Arguments
+    ---------
+    g : CSRGraph — the graph to plan, in its final node numbering.
+    arch : "gcn" | "gin" | "gat" — decides the §4.2 aggregation placement
+        (which of in_dim/hidden_dim the kernel sees).
+    edge_vals : optional (E,) float32 aligned with ``g.indices`` — static
+        per-edge weights baked into the schedule (GCN's 1/sqrt(d_u d_v)).
+    config : optional AggConfig — skip the tuner and partition with exactly
+        these knobs (the plan-cache path).
+    with_backward : also partition the TRANSPOSED graph under the same
+        config and attach it as ``plan.partition_bwd`` (+``edge_perm_bwd``),
+        so `PlanExecutor` can run `jax.grad` through the Pallas backends.
+        Off by default — inference-only plans skip the extra partitioning.
+
+    Returns an `AggregationPlan`; feed it to `core.aggregate.PlanExecutor`.
+
+    Example
+    -------
+    >>> plan = plan_for(g, arch="gcn", edge_vals=vals, with_backward=True)
+    >>> ex = PlanExecutor(plan, backend="pallas_interpret")
+    >>> grads = jax.grad(lambda f: ex(f).sum())(feat)      # transposed kernel
     """
     if props is None:
         props = extract_graph_props(g, detect_communities=False)
@@ -117,10 +147,17 @@ def plan_for(g: CSRGraph, *, arch: str = "gcn", in_dim: int = 128,
         config = tuner_res.best
     part = partition_graph(g, gs=config.gs, gpt=config.gpt, ont=config.ont,
                            src_win=config.src_win, edge_vals=edge_vals)
+    part_bwd = edge_perm = None
+    if with_backward:
+        gT, vals_t, edge_perm = transpose_graph(g, edge_vals)
+        part_bwd = partition_graph(gT, gs=config.gs, gpt=config.gpt,
+                                   ont=config.ont, src_win=config.src_win,
+                                   edge_vals=vals_t)
     return AggregationPlan(
         graph=g, partition=part, config=config, graph_props=props,
         arch=archp, perm=None, tuner=tuner_res, stats=partition_stats(part),
         reduce_dim_first=archp.reduce_dim_first,
+        partition_bwd=part_bwd, edge_perm_bwd=edge_perm,
     )
 
 

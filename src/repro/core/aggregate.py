@@ -1,13 +1,16 @@
 """High-level aggregation API used by GNN layers.
 
 Bridges an `AggregationPlan` (advisor output) to executable JAX functions.
+When the plan carries a backward partition (`plan_for(with_backward=True)`),
+every call is differentiable on every backend: the Pallas kernel's custom
+VJP re-aggregates the output cotangent over the transposed schedule (see
+`repro.kernels.ops`).
 """
 from __future__ import annotations
 
-from typing import Literal
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.advisor import AggregationPlan
 from repro.kernels.ops import DeviceSchedule, aggregate as _kernel_aggregate
@@ -22,43 +25,74 @@ class PlanExecutor:
                  backend: str = "pallas_interpret"):
         self.plan = plan
         self.sched = DeviceSchedule(plan.partition)
+        self.sched_bwd = (None if plan.partition_bwd is None else
+                          DeviceSchedule(plan.partition_bwd,
+                                         edge_perm=plan.edge_perm_bwd))
         self.backend = backend
         self.dt = plan.config.dt
         self.variant = plan.config.variant
+        # cache the inverse node permutation once — aggregate_original_order
+        # used to argsort on every call.
+        self._perm = None if plan.perm is None else jnp.asarray(plan.perm)
+        self._inv_perm = (None if plan.perm is None else
+                          jnp.asarray(np.argsort(plan.perm)))
 
     @classmethod
     def from_schedule(cls, sched: DeviceSchedule, *, dt: int, variant: str,
                       backend: str = "pallas_interpret") -> "PlanExecutor":
-        """Plan-less executor over a bare schedule — the serving engine's
-        shared jitted forward rebuilds one per trace from traced arrays."""
+        """Plan-less executor over a bare schedule.
+
+        The serving engine's shared jitted forward rebuilds one per trace
+        from traced arrays, so the compiled executable closes over nothing
+        entry-specific.
+
+        Arguments
+        ---------
+        sched : DeviceSchedule (or any duck-typed view exposing the same
+            array members + static ints).  Arrays may be jax tracers.
+        dt : int — dim-tile width handed to the kernel (clamped to the
+            feature width at call time).
+        variant : "folded" | "slot_onehot" — kernel gather variant.
+        backend : see `repro.kernels.ops` Backend dispatch rules.
+
+        The result has no plan and no backward schedule: it is forward-only
+        (exactly what serving needs).  Example:
+
+        >>> ex = PlanExecutor.from_schedule(sched, dt=128, variant="folded")
+        >>> out = ex(feat)                       # (N, D) float32
+        """
         ex = cls.__new__(cls)
         ex.plan = None
         ex.sched = sched
+        ex.sched_bwd = None
         ex.backend = backend
         ex.dt = dt
         ex.variant = variant
+        ex._perm = ex._inv_perm = None
         return ex
 
     def __call__(self, feat: jax.Array) -> jax.Array:
         """feat: (N, D) in the plan's (renumbered) node order -> (N, D) f32."""
         return _kernel_aggregate(feat, self.sched, dt=self.dt,
-                                 backend=self.backend, variant=self.variant)
+                                 backend=self.backend, variant=self.variant,
+                                 sched_bwd=self.sched_bwd)
 
     def aggregate_edges(self, feat: jax.Array,
                         edge_values: jax.Array) -> jax.Array:
         """Aggregation with DYNAMIC per-edge weights (original CSR edge
         order of the plan's graph) — the GAT-type path: the schedule is
-        reused, only the edge-value tensor is re-scattered per forward."""
+        reused, only the edge-value tensor is re-scattered per forward.
+        With a backward schedule, gradients flow to BOTH ``feat`` (via the
+        transposed kernel) and ``edge_values`` (per-edge gather-dot)."""
         return _kernel_aggregate(feat, self.sched, dt=self.dt,
                                  backend=self.backend, variant=self.variant,
-                                 edge_values=edge_values)
+                                 edge_values=edge_values,
+                                 sched_bwd=self.sched_bwd)
 
     def aggregate_original_order(self, feat_original: jax.Array) -> jax.Array:
         """Convenience: accepts/returns arrays in the ORIGINAL node order."""
         plan = self.plan
         if plan.perm is None:
             return self(feat_original)
-        perm = jnp.asarray(plan.perm)
-        inv = jnp.argsort(perm)
-        out = self(feat_original[inv])
-        return out[perm]
+        out = self(feat_original[self._inv_perm])
+        return out[self._perm]

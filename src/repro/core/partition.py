@@ -30,7 +30,8 @@ import numpy as np
 
 from repro.graphs.csr import CSRGraph
 
-__all__ = ["GroupPartition", "partition_graph", "partition_stats"]
+__all__ = ["GroupPartition", "partition_graph", "partition_stats",
+           "transpose_graph"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -201,6 +202,42 @@ def partition_graph(g: CSRGraph, *, gs: int = 16, gpt: int = 16, ont: int = 8,
         gs=gs, gpt=gpt, ont=ont, src_win=src_win,
         num_nodes=n, num_edges=e,
     )
+
+
+def transpose_graph(g: CSRGraph, edge_vals: Optional[np.ndarray] = None,
+                    ) -> tuple[CSRGraph, Optional[np.ndarray], np.ndarray]:
+    """Transpose a CSR graph, carrying per-edge values along.
+
+    Aggregation computes ``out = A @ feat`` where ``A[dst, src] = ev`` for
+    every CSR edge (row = dst, ``indices`` = src).  Its linearization w.r.t.
+    ``feat`` is ``A^T @ g`` — aggregation over the TRANSPOSED graph with the
+    same edge values.  This helper emits that graph so the advisor can
+    pre-plan both directions (the forward/backward kernel-template pairing
+    FeatGraph describes for training).
+
+    Unlike ``from_edges`` this never dedups or symmetrizes: the edge
+    *multiset* is preserved exactly, which is what linearity requires.
+
+    Returns ``(gT, edge_vals_T, edge_perm)`` where ``edge_perm`` maps
+    transposed-CSR edge index ``i`` to the ORIGINAL CSR edge index it came
+    from (``gT``'s edge ``i`` is ``g``'s edge ``edge_perm[i]``), so dynamic
+    per-edge values can be re-laid-out as ``ev_T = ev[edge_perm]``.
+    ``edge_vals_T`` is that permutation applied to ``edge_vals`` (None in,
+    None out).
+    """
+    n = g.num_nodes
+    rows, cols = g.to_coo()                    # rows = dst, cols = src
+    # transposed edge: new row = cols, new neighbor = rows; CSR wants edges
+    # sorted by (new_row, new_nbr) to match partition's row-wise sorting
+    # convention (and permute()'s lexsort order).
+    order = np.lexsort((rows, cols))
+    counts = np.bincount(cols, minlength=n).astype(np.int64)
+    new_indptr = np.concatenate([[0], np.cumsum(counts)])
+    gT = CSRGraph(new_indptr, rows[order].astype(np.int32))
+    vals_t = None
+    if edge_vals is not None:
+        vals_t = np.asarray(edge_vals, dtype=np.float32)[order]
+    return gT, vals_t, order.astype(np.int64)
 
 
 def partition_stats(p: GroupPartition) -> dict:

@@ -42,7 +42,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["group_aggregate_pallas"]
+__all__ = ["group_aggregate_pallas", "group_edge_grad_pallas"]
 
 Variant = Literal["folded", "slot_onehot"]
 
@@ -96,6 +96,98 @@ def _kernel(nb_ref, tw_ref,                       # scalar prefetch (SMEM)
     out_ref[...] += jnp.dot(scatter, per_group, preferred_element_type=jnp.float32)
 
 
+def _edge_grad_kernel(nb_ref, tw_ref,                 # scalar prefetch (SMEM)
+                      grad_ref, feat_ref, nbrs_ref, lnode_ref,  # VMEM inputs
+                      out_ref,                         # (1, gpt, gs) per tile
+                      *, gs: int, gpt: int, ont: int, src_win: int):
+    j = pl.program_id(1)
+
+    # dim tiles are innermost here (grid (T, J)), so every j-step revisits
+    # the same (1, gpt, gs) output block: zero on the first, accumulate after.
+    @pl.when(j == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    nbrs = nbrs_ref[0]                                  # (gpt, gs) global ids
+    t = pl.program_id(0)
+    local = nbrs - tw_ref[t] * src_win                  # ids within the window
+    feat = feat_ref[...]                                # (src_win, dt)
+    grad = grad_ref[...]                                # (ont, dt)
+    fdtype = feat.dtype
+
+    # gather the neighbor features: one one-hot row per slot (the same
+    # MXU-native gather the forward kernel uses).
+    flat = local.reshape(gpt * gs, 1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (gpt * gs, src_win), 1)
+    onehot = (flat == cols).astype(fdtype)
+    fsel = jnp.dot(onehot, feat, preferred_element_type=jnp.float32)
+
+    # gather each slot's output-row cotangent: one-hot over the node block,
+    # broadcast from per-group local_node to every slot of the group.
+    ln = lnode_ref[0].reshape(gpt, 1)
+    ln_slot = jnp.broadcast_to(ln, (gpt, gs)).reshape(gpt * gs, 1)
+    gcols = jax.lax.broadcasted_iota(jnp.int32, (gpt * gs, ont), 1)
+    gsel = jnp.dot((ln_slot == gcols).astype(jnp.float32),
+                   grad.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+    # per-slot gather-dot over this dt-slice; padded slots produce garbage
+    # that the caller never reads (only (edge_slot, edge_pos) entries are
+    # gathered back out).
+    out_ref[...] += (fsel * gsel).sum(axis=1).reshape(1, gpt, gs)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("gs", "gpt", "ont", "src_win", "dt", "interpret"),
+)
+def group_edge_grad_pallas(grad_padded: jax.Array, feat_padded: jax.Array,
+                           nbrs: jax.Array, local_node: jax.Array,
+                           tile_node_block: jax.Array, tile_window: jax.Array,
+                           *, gs: int, gpt: int, ont: int, src_win: int,
+                           dt: int, interpret: bool = False) -> jax.Array:
+    """Per-slot edge-value cotangent: the backward of aggregation w.r.t. the
+    (T, gpt, gs) edge-value tensor.
+
+    For slot (t, g, s) holding edge (v <- u):  out[t, g, s] = <grad[v], feat[u]>
+    — a per-edge gather-dot realized as two one-hot matmuls against the
+    VMEM-resident feature window and output node block (same schedule
+    metadata, same scalar-prefetch-driven BlockSpecs as the forward kernel).
+
+    grad_padded: (out_rows, D_pad) output cotangent, out_rows % ont == 0.
+    feat_padded: (N_src_pad, D_pad), N_src_pad % src_win == 0, D_pad % dt == 0.
+    Returns (T, gpt, gs) float32.  Padded slots hold garbage; callers gather
+    only real (edge_slot, edge_pos) entries.
+    """
+    out_rows, d_pad = grad_padded.shape
+    n_src, d_pad2 = feat_padded.shape
+    assert d_pad == d_pad2 and d_pad % dt == 0, (d_pad, d_pad2, dt)
+    assert n_src % src_win == 0 and out_rows % ont == 0
+    T = nbrs.shape[0]
+    assert nbrs.shape == (T, gpt, gs) and local_node.shape == (T, gpt)
+    J = d_pad // dt
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(T, J),
+        in_specs=[
+            pl.BlockSpec((ont, dt), lambda t, j, nb, tw: (nb[t], j)),
+            pl.BlockSpec((src_win, dt), lambda t, j, nb, tw: (tw[t], j)),
+            pl.BlockSpec((1, gpt, gs), lambda t, j, nb, tw: (t, 0, 0)),
+            pl.BlockSpec((1, gpt), lambda t, j, nb, tw: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, gpt, gs), lambda t, j, nb, tw: (t, 0, 0)),
+    )
+    kernel = functools.partial(_edge_grad_kernel, gs=gs, gpt=gpt, ont=ont,
+                               src_win=src_win)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, gpt, gs), jnp.float32),
+        interpret=interpret,
+    )(tile_node_block, tile_window, grad_padded, feat_padded, nbrs, local_node)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("gs", "gpt", "ont", "src_win", "dt", "out_rows",
@@ -109,11 +201,38 @@ def group_aggregate_pallas(feat_padded: jax.Array,
                            dt: int, out_rows: int,
                            variant: Variant = "folded",
                            interpret: bool = False) -> jax.Array:
-    """Run the group-aggregation kernel.
+    """Run the group-aggregation kernel (one `pl.pallas_call`).
 
-    feat_padded: (N_src_pad, D_pad) with N_src_pad % src_win == 0,
-                 D_pad % dt == 0.  Returns (out_rows, D_pad) float32 where
-                 out_rows % ont == 0.
+    Arguments (T = number of tiles; all arrays device-resident)
+    ---------
+    feat_padded : (N_src_pad, D_pad) float — source features;
+        N_src_pad % src_win == 0 and D_pad % dt == 0 (caller pads; see
+        `repro.kernels.ops.aggregate` for the padding/unpadding wrapper).
+    nbrs : (T, gpt, gs) int32 — global source ids per slot.  Padded slots
+        point at their tile's window base so local ids stay in range.
+    edge_val : (T, gpt, gs) float32 — per-edge weights; exactly 0 marks a
+        padded slot.
+    local_node : (T, gpt) int32 — target row within the output node block.
+    tile_node_block / tile_window : (T,) int32 — scalar-prefetched per-tile
+        output-block / feature-window indices driving the BlockSpec index
+        maps.
+    gs, gpt, ont, src_win, dt, out_rows : static ints; out_rows % ont == 0.
+    variant : "folded" | "slot_onehot" — see module docstring.
+    interpret : run under the Pallas interpreter (CPU).
+
+    Returns (out_rows, D_pad) float32: out[v] = Σ_slots ev · feat[nbr].
+
+    This entry point is forward-only; `repro.kernels.ops.aggregate` adds the
+    custom VJP (backward = this kernel over the transposed schedule).
+
+    Example (schedule from `core.partition.partition_graph`):
+
+    >>> p = partition_graph(g, gs=8, gpt=16, ont=8, src_win=512)
+    >>> out = group_aggregate_pallas(
+    ...     feat_padded, jnp.asarray(p.nbrs), jnp.asarray(p.edge_val),
+    ...     jnp.asarray(p.local_node), jnp.asarray(p.tile_node_block),
+    ...     jnp.asarray(p.tile_window), gs=p.gs, gpt=p.gpt, ont=p.ont,
+    ...     src_win=p.src_win, dt=128, out_rows=p.padded_out_rows)
     """
     n_src, d_pad = feat_padded.shape
     assert n_src % src_win == 0 and d_pad % dt == 0, (n_src, d_pad, src_win, dt)

@@ -3,6 +3,34 @@
 `aggregate(...)` is the user-facing entry point: it takes raw node features
 plus a `GroupPartition` schedule, handles all padding, and dispatches to the
 Pallas kernel (TPU) or its pure-XLA fallback.
+
+Backend dispatch rules
+----------------------
+``backend`` selects how the group schedule is executed:
+
+  * ``"xla"`` — `repro.kernels.ref.group_aggregate_ref`, a pure gather +
+    segment-sum lowering.  Runs anywhere, is the semantic ground truth, and
+    is natively differentiable (every op has an XLA AD rule).  This is the
+    reference both the tests and `benchmarks/bench_train.py` compare
+    against.
+  * ``"pallas"`` — `group_aggregate_pallas` compiled for the local TPU.
+    Fastest path; requires a TPU backend.
+  * ``"pallas_interpret"`` — the same Pallas kernel executed by the Pallas
+    interpreter (`interpret=True`).  Bit-for-bit the kernel's semantics on
+    CPU; used by CI and anywhere without a TPU.
+
+Differentiation: the Pallas backends have no built-in AD rule, so
+``aggregate`` installs a `jax.custom_vjp` whenever a *backward schedule* is
+supplied (``sched_bwd=``, a `DeviceSchedule` built from the TRANSPOSED
+graph's partition — see `core.partition.transpose_graph`).  The backward
+pass is then itself a group-aggregate kernel launch over the transposed
+schedule (cotangent w.r.t. ``feat``) plus, for the dynamic edge-value path,
+a `group_edge_grad_pallas` launch over the forward schedule (cotangent
+w.r.t. ``edge_values``).  The custom VJP applies to EVERY backend once
+``sched_bwd`` is passed — handing it to ``backend="xla"`` exercises the
+transposed schedule through the reference lowering (numerically equivalent
+to native AD).  Without ``sched_bwd``, the XLA backend differentiates
+natively and the Pallas backends are forward-only (``jax.grad`` raises).
 """
 from __future__ import annotations
 
@@ -16,7 +44,8 @@ import numpy as np
 from typing import TYPE_CHECKING
 
 from repro.kernels import ref as _ref
-from repro.kernels.group_aggregate import group_aggregate_pallas
+from repro.kernels.group_aggregate import (group_aggregate_pallas,
+                                           group_edge_grad_pallas)
 
 if TYPE_CHECKING:                      # avoid core<->kernels import cycle
     from repro.core.partition import GroupPartition
@@ -27,9 +56,22 @@ Backend = Literal["pallas", "pallas_interpret", "xla"]
 
 
 class DeviceSchedule:
-    """Device-resident copy of a GroupPartition's arrays + static config."""
+    """Device-resident copy of a GroupPartition's arrays + static config.
 
-    def __init__(self, p: "GroupPartition"):
+    Array members (T = tiles): ``nbrs``/``edge_val`` (T, gpt, gs),
+    ``local_node`` (T, gpt), ``tile_node_block``/``tile_window`` (T,),
+    ``edge_slot``/``edge_pos`` (E,).  Static ints mirror the partition's
+    config (`gs`, `gpt`, `ont`, `src_win`) and padding geometry
+    (`padded_src_rows`, `padded_out_rows`).
+
+    When a schedule is built from a TRANSPOSED partition to serve as a
+    backward schedule, ``edge_perm`` maps its CSR edge order back to the
+    forward graph's edge order (``ev_bwd = ev_fwd[edge_perm]``); it is
+    ``None`` for ordinary forward schedules.
+    """
+
+    def __init__(self, p: "GroupPartition",
+                 edge_perm: Optional[np.ndarray] = None):
         self.nbrs = jnp.asarray(p.nbrs)
         self.edge_val = jnp.asarray(p.edge_val)
         self.local_node = jnp.asarray(p.local_node)
@@ -37,6 +79,7 @@ class DeviceSchedule:
         self.tile_window = jnp.asarray(p.tile_window)
         self.edge_slot = jnp.asarray(p.edge_slot)
         self.edge_pos = jnp.asarray(p.edge_pos)
+        self.edge_perm = None if edge_perm is None else jnp.asarray(edge_perm)
         self.gs, self.gpt, self.ont, self.src_win = p.gs, p.gpt, p.ont, p.src_win
         self.num_nodes = p.num_nodes
         self.num_edges = p.num_edges
@@ -54,26 +97,25 @@ def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
     return jnp.pad(x, ((0, rows - r), (0, cols - c)))
 
 
-def aggregate(feat: jax.Array, sched: DeviceSchedule, *,
-              dt: int = 128, backend: Backend = "pallas_interpret",
-              variant: str = "folded",
-              edge_values: Optional[jax.Array] = None) -> jax.Array:
-    """out[v] = sum over v's neighbor groups of edge_val * feat[nbr].
+def _scatter_edge_values(sched: DeviceSchedule,
+                         edge_values: jax.Array) -> jax.Array:
+    """Lay per-edge values (original CSR order) out in schedule layout."""
+    T, gpt, gs = sched.edge_val.shape
+    return jnp.zeros((T * gpt, gs), jnp.float32).at[
+        sched.edge_slot, sched.edge_pos].set(
+        edge_values.astype(jnp.float32)).reshape(T, gpt, gs)
 
-    edge_values: optional (E,) per-edge weights in ORIGINAL CSR edge order,
-    overriding the schedule's static values — the dynamic-edge-value path
-    GAT-type aggregation needs (weights recomputed every forward).
-    Returns (num_nodes, D) float32.
-    """
+
+def _aggregate_impl(feat: jax.Array, sched: DeviceSchedule, *,
+                    dt: int, backend: Backend, variant: str,
+                    edge_values: Optional[jax.Array] = None) -> jax.Array:
+    """Forward-only aggregation (no AD rule on the Pallas paths)."""
     n, d = feat.shape
     assert n == sched.num_nodes, (n, sched.num_nodes)
     if sched.num_tiles == 0:
         return jnp.zeros((n, d), jnp.float32)
     if edge_values is not None:
-        T, gpt, gs = sched.edge_val.shape
-        ev = jnp.zeros((T * gpt, gs), jnp.float32).at[
-            sched.edge_slot, sched.edge_pos].set(
-            edge_values.astype(jnp.float32)).reshape(T, gpt, gs)
+        ev = _scatter_edge_values(sched, edge_values)
     else:
         ev = sched.edge_val
     if backend == "xla":
@@ -94,3 +136,95 @@ def aggregate(feat: jax.Array, sched: DeviceSchedule, *,
         variant=variant, interpret=(backend == "pallas_interpret"),
     )
     return out[:n, :d]
+
+
+def _edge_cotangent(g_out: jax.Array, feat: jax.Array,
+                    sched: DeviceSchedule, *, dt: int,
+                    backend: Backend) -> jax.Array:
+    """Cotangent w.r.t. per-edge values (original CSR order): the per-edge
+    gather-dot <g_out[dst], feat[src]>, via the forward schedule."""
+    n, d = feat.shape
+    T, gpt, gs = sched.edge_val.shape
+    if backend == "xla":
+        per_slot = _ref.group_edge_grad_ref(
+            _pad_to(g_out, sched.padded_out_rows, d),
+            _pad_to(feat, sched.padded_src_rows, d),
+            sched.nbrs, sched.local_node, sched.tile_node_block, sched.ont)
+    else:
+        dt_eff = min(dt, max(8, d))
+        d_pad = -(-d // dt_eff) * dt_eff
+        per_slot = group_edge_grad_pallas(
+            _pad_to(g_out, sched.padded_out_rows, d_pad),
+            _pad_to(feat, sched.padded_src_rows, d_pad),
+            sched.nbrs, sched.local_node,
+            sched.tile_node_block, sched.tile_window,
+            gs=sched.gs, gpt=sched.gpt, ont=sched.ont,
+            src_win=sched.src_win, dt=dt_eff,
+            interpret=(backend == "pallas_interpret"))
+    return per_slot.reshape(T * gpt, gs)[sched.edge_slot, sched.edge_pos]
+
+
+# --- the differentiable wrapper: forward over the CSR schedule, backward
+# --- over the transposed (CSC) schedule — "the transpose of aggregation is
+# --- aggregation over the transposed graph".
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _aggregate_diff(feat, edge_values, sched, sched_bwd, dt, backend, variant):
+    return _aggregate_impl(feat, sched, dt=dt, backend=backend,
+                           variant=variant, edge_values=edge_values)
+
+
+def _aggregate_diff_fwd(feat, edge_values, sched, sched_bwd, dt, backend,
+                        variant):
+    out = _aggregate_impl(feat, sched, dt=dt, backend=backend,
+                          variant=variant, edge_values=edge_values)
+    return out, (feat, edge_values)
+
+
+def _aggregate_diff_bwd(sched, sched_bwd, dt, backend, variant, res, g_out):
+    feat, edge_values = res
+    g_out = g_out.astype(jnp.float32)
+    if edge_values is None:
+        ev_bwd = None            # sched_bwd.edge_val holds the transposed vals
+        ev_bar = None
+    else:
+        ev_bwd = edge_values[sched_bwd.edge_perm]
+        ev_bar = _edge_cotangent(g_out, feat.astype(jnp.float32), sched,
+                                 dt=dt, backend=backend
+                                 ).astype(edge_values.dtype)
+    feat_bar = _aggregate_impl(g_out, sched_bwd, dt=dt, backend=backend,
+                               variant=variant, edge_values=ev_bwd)
+    return feat_bar.astype(feat.dtype), ev_bar
+
+
+_aggregate_diff.defvjp(_aggregate_diff_fwd, _aggregate_diff_bwd)
+
+
+def aggregate(feat: jax.Array, sched: DeviceSchedule, *,
+              dt: int = 128, backend: Backend = "pallas_interpret",
+              variant: str = "folded",
+              edge_values: Optional[jax.Array] = None,
+              sched_bwd: Optional[DeviceSchedule] = None) -> jax.Array:
+    """out[v] = sum over v's neighbor groups of edge_val * feat[nbr].
+
+    feat: (N, D) node features in the schedule's node order, any float
+    dtype (accumulation is always float32).  Returns (num_nodes, D) float32.
+
+    edge_values: optional (E,) per-edge weights in ORIGINAL CSR edge order,
+    overriding the schedule's static values — the dynamic-edge-value path
+    GAT-type aggregation needs (weights recomputed every forward).
+
+    sched_bwd: optional `DeviceSchedule` over the TRANSPOSED graph (same
+    config), making the call differentiable w.r.t. ``feat`` and
+    ``edge_values`` on every backend (see the module docstring).  Must carry
+    ``edge_perm`` when ``edge_values`` is used.  `core.advisor.plan_for`
+    builds the pair with ``with_backward=True``.
+    """
+    if sched_bwd is None:
+        return _aggregate_impl(feat, sched, dt=dt, backend=backend,
+                               variant=variant, edge_values=edge_values)
+    if edge_values is not None and sched_bwd.edge_perm is None:
+        raise ValueError(
+            "dynamic edge_values need a backward schedule with edge_perm "
+            "(build it via transpose_graph / plan_for(with_backward=True))")
+    return _aggregate_diff(feat, edge_values, sched, sched_bwd, dt, backend,
+                           variant)

@@ -6,6 +6,14 @@ config.  On this CPU container you run reduced configs:
     PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --reduced \
         --steps 100 --global-batch 8 --seq-len 64 --ckpt-dir /tmp/ckpt
 
+GNN archs (gcn / gin / gat) train a node classifier on a paper-dataset
+replica through the advisor path; ``--backend pallas``/``pallas_interpret``
+runs forward AND backward through the group-aggregate kernel (the backward
+pass is the transposed schedule — docs/training.md):
+
+    PYTHONPATH=src python -m repro.launch.train --arch gcn --dataset cora \
+        --steps 50 --backend pallas_interpret
+
 On a real cluster the same driver runs the full config under
 make_production_mesh() with per-host data sharding.
 """
@@ -16,10 +24,73 @@ import dataclasses
 import os
 import time
 
+GNN_ARCHS = ("gcn", "gin", "gat")
+
+
+def _main_gnn(args) -> int:
+    """GNN training branch: dataset replica -> advisor plan (fwd+bwd
+    schedules) -> jitted value_and_grad through the chosen backend."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.graphs.datasets import make_dataset
+    from repro.models.gnn import (GNNConfig, build_gnn, make_gnn_train_step,
+                                  planted_labels)
+    from repro.optim.adamw import AdamWConfig, adamw_init, cosine_schedule
+    from repro.runtime.trainer import (FailureInjector, Trainer,
+                                       TrainerConfig)
+
+    g, spec, feat = make_dataset(args.dataset, max_nodes=args.max_nodes,
+                                 seed=args.seed)
+    in_dim = min(spec.dim, 128)
+    feat = feat[:, :in_dim].astype(np.float32)
+    cfg = GNNConfig(arch=args.arch, in_dim=in_dim,
+                    hidden_dim=args.hidden_dim,
+                    num_classes=spec.num_classes, num_layers=2,
+                    backend=args.backend)
+    # learnable planted task: labels from a frozen random teacher
+    labels = planted_labels(g, cfg, feat, seed=args.seed + 7)
+
+    model = build_gnn(g, cfg, reorder="auto", tune_iters=6, seed=args.seed)
+    batch = {"feat": jnp.asarray(model.plan.renumber_features(feat)),
+             "labels": jnp.asarray(model.plan.renumber_features(labels))}
+
+    opt = AdamWConfig(lr=args.lr,
+                      schedule=cosine_schedule(args.warmup, args.steps))
+    step_fn = make_gnn_train_step(model, opt)
+    # unlike the LM branch, arch+seed does not determine parameter shapes —
+    # key the auto-restore dir on everything that does
+    ckpt_dir = args.ckpt_dir or os.path.join(
+        "/tmp", f"repro_train_{args.arch}_{args.dataset}_h{args.hidden_dim}"
+                f"_{args.backend}_{args.seed}")
+    trainer = Trainer(
+        TrainerConfig(ckpt_dir=ckpt_dir, ckpt_every=args.ckpt_every,
+                      log_every=10),
+        step_fn, lambda step: batch,
+        (model.params, adamw_init(model.params)),
+        injector=FailureInjector(args.fail_at or ()))
+    t0 = time.time()
+    trainer.run(args.steps)
+    hist = trainer.metrics_history
+    losses = (f"first_loss={hist[0]['loss']:.4f} "
+              f"last_loss={hist[-1]['loss']:.4f} " if hist else "")
+    print(f"[train] arch={args.arch} backend={args.backend} "
+          f"dataset={args.dataset} steps={len(hist)} {losses}"
+          f"avg_step={trainer.avg_step_time()*1e3:.1f}ms "
+          f"wall={time.time()-t0:.1f}s")
+    return 0
+
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--arch", required=True)
+    p.add_argument("--backend", default="xla",
+                   choices=["xla", "pallas", "pallas_interpret"],
+                   help="aggregation backend (GNN archs only)")
+    p.add_argument("--dataset", default="cora",
+                   help="paper-dataset replica (GNN archs only)")
+    p.add_argument("--max-nodes", type=int, default=2000)
+    p.add_argument("--hidden-dim", type=int, default=32)
     p.add_argument("--reduced", action="store_true", default=True)
     p.add_argument("--full", dest="reduced", action="store_false")
     p.add_argument("--steps", type=int, default=100)
@@ -34,6 +105,9 @@ def main(argv=None) -> int:
                    help="inject a simulated failure at this step (repeatable)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
+
+    if args.arch in GNN_ARCHS:
+        return _main_gnn(args)
 
     import jax
     import jax.numpy as jnp

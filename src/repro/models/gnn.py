@@ -11,6 +11,12 @@ Faithful to the paper's §4.2 placement rule:
 Edge values: GCN uses the symmetric normalization 1/sqrt(d_u d_v) with
 self-loops folded into the group schedule as weighted edges, so the whole
 \\hat{A} X W happens inside the group_aggregate kernel.
+
+Training runs on ANY backend: `build_gnn` attaches the transposed-schedule
+backward partition whenever the backend is a Pallas one (or when
+``with_backward=True`` is forced), so `jax.grad` of `GNNModel.loss` flows
+through the group-aggregate kernel itself — backward aggregation is the
+same kernel over the transposed graph's schedule (see docs/training.md).
 """
 from __future__ import annotations
 
@@ -28,7 +34,7 @@ from repro.graphs.csr import CSRGraph
 Pytree = Any
 
 __all__ = ["GNNConfig", "gcn_edge_values", "build_gnn", "init_gnn_params",
-           "GNNModel"]
+           "GNNModel", "make_gnn_train_step", "planted_labels"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,7 +46,7 @@ class GNNConfig:
     num_layers: int = 2
     gin_eps: float = 0.0
     gat_slope: float = 0.2      # LeakyReLU slope for attention logits
-    backend: str = "xla"        # kernel backend for examples/tests on CPU
+    backend: str = "xla"        # "xla" | "pallas" | "pallas_interpret"
 
 
 def gcn_edge_values(g: CSRGraph) -> tuple[CSRGraph, np.ndarray]:
@@ -79,7 +85,10 @@ class GNNModel:
                 rows, cols = self._edges
                 e = jax.nn.leaky_relu(s_dst[rows] + s_src[cols],
                                       negative_slope=cfg.gat_slope)
-                wgt = jnp.exp(e - jax.lax.stop_gradient(e.max()))
+                # edge count is static per trace; an edge-less (padded)
+                # subgraph has nothing to normalize over
+                emax = jax.lax.stop_gradient(e.max()) if e.shape[0] else 0.0
+                wgt = jnp.exp(e - emax)
                 num = self.executor.aggregate_edges(z, wgt)
                 den = self.executor.aggregate_edges(
                     jnp.ones((z.shape[0], 1), jnp.float32), wgt)
@@ -127,23 +136,72 @@ class GNNModel:
 
 def build_gnn(g: CSRGraph, cfg: GNNConfig, *, key: Optional[jax.Array] = None,
               reorder: str = "auto", tune_iters: int = 6,
-              config=None, seed: int = 0) -> GNNModel:
-    """Run the advisor on the graph, build the plan executor + parameters."""
+              config=None, seed: int = 0,
+              with_backward: Optional[bool] = None) -> GNNModel:
+    """Run the advisor on the graph, build the plan executor + parameters.
+
+    with_backward: attach the transposed-schedule backward partition so
+    `jax.grad` works through the Pallas kernel.  Default (None) enables it
+    exactly when the backend is a Pallas one — XLA differentiates natively,
+    and inference-only Pallas use can pass False to skip the extra
+    partitioning pass.
+    """
     key = key if key is not None else jax.random.PRNGKey(seed)
+    if with_backward is None:
+        with_backward = cfg.backend.startswith("pallas")
     if cfg.arch == "gcn":
         g2, vals = gcn_edge_values(g)
         plan = advise(g2, arch="gcn", in_dim=cfg.in_dim,
                       hidden_dim=cfg.hidden_dim, num_layers=cfg.num_layers,
                       edge_vals=vals, reorder=reorder, tune_iters=tune_iters,
-                      config=config, seed=seed)
+                      config=config, seed=seed, with_backward=with_backward)
     else:
         plan = advise(g, arch=cfg.arch, in_dim=cfg.in_dim,
                       hidden_dim=cfg.hidden_dim, num_layers=cfg.num_layers,
                       reorder=reorder, tune_iters=tune_iters, config=config,
-                      seed=seed)
+                      seed=seed, with_backward=with_backward)
     executor = PlanExecutor(plan, backend=cfg.backend)
     params = init_gnn_params(cfg, key)
     return GNNModel(cfg=cfg, plan=plan, executor=executor, params=params)
+
+
+def planted_labels(g: CSRGraph, cfg: GNNConfig, feat: np.ndarray, *,
+                   seed: int = 7) -> np.ndarray:
+    """Labels from a frozen random teacher of the same architecture — a
+    learnable planted node-classification task for the train drivers."""
+    teacher = build_gnn(g, dataclasses.replace(cfg, backend="xla"),
+                        reorder="off", tune_iters=2, seed=seed)
+    return np.asarray(
+        teacher.logits(teacher.params, jnp.asarray(feat)).argmax(-1))
+
+
+def make_gnn_train_step(model: GNNModel, opt, *, jit: bool = True):
+    """Build the `Trainer`-shaped step function for full-graph GNN training.
+
+    opt: an `AdamWConfig`.  Returns ``step_fn(state, batch)`` where state is
+    ``(params, opt_state)`` and batch is ``{"feat", "labels"[, "mask"]}`` in
+    the plan's node order.  The value-and-grad runs through the model's
+    configured backend — on "pallas"/"pallas_interpret" the backward pass is
+    the transposed-schedule kernel, so the plan must carry
+    ``partition_bwd`` (`build_gnn` attaches it for Pallas backends).
+    """
+    from repro.optim.adamw import adamw_update
+
+    if model.cfg.backend.startswith("pallas") and (
+            model.plan is not None and model.plan.partition_bwd is None):
+        raise ValueError(
+            "training on a Pallas backend needs a backward schedule: "
+            "build the model with with_backward=True")
+
+    def step_fn(state, batch):
+        params, opt_state = state
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch["feat"], batch["labels"],
+                                      batch.get("mask"))
+        params, opt_state, om = adamw_update(opt, grads, opt_state, params)
+        return (params, opt_state), {**metrics, **om}
+
+    return jax.jit(step_fn) if jit else step_fn
 
 
 def init_gnn_params(cfg: GNNConfig, key: jax.Array) -> Pytree:

@@ -102,6 +102,13 @@ class Trainer:
                 msg = " ".join(f"{k}={metrics[k]:.4f}" for k in keys)
                 self.log(f"[trainer] step={self.step} {msg}")
 
+    def avg_step_time(self, *, skip: int = 1) -> float:
+        """Mean step wall-time (s) over the recorded history, dropping the
+        first ``skip`` steps (jit compilation) — the number train drivers
+        and `benchmarks/bench_train.py` report as fwd+bwd step time."""
+        ts = [m["step_time_s"] for m in self.metrics_history[skip:]]
+        return float(np.mean(ts)) if ts else float("nan")
+
     def run(self, num_steps: int) -> Pytree:
         """Run to `self.step + num_steps`, surviving injected failures."""
         target = self.step + num_steps

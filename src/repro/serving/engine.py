@@ -74,7 +74,30 @@ class _EngineStats:
 
 class ServingEngine:
     """Front door: owns the resident graph, features, weights, batcher and
-    plan cache.  Thread-free; callers may drive time explicitly (`now=`)."""
+    plan cache.  Thread-free; callers may drive time explicitly (`now=`).
+
+    Arguments
+    ---------
+    graph : CSRGraph — resident graph, aggregation direction dst<-src.
+    feat : (num_nodes, cfg.in_dim) float32 (asserted) — resident node
+        features in the graph's node order.
+    cfg : GNNConfig — architecture + backend; `cfg.backend` is what every
+        cached plan's executor dispatches to ("xla" on CPU,
+        "pallas"/"pallas_interpret" with a TPU/interpreter).
+    params : optional model pytree (default: fresh `init_gnn_params`).
+    serving : ServingConfig — batching/bucketing/tuner knobs.
+
+    API: `serve_batch(seeds) -> (len(seeds), num_classes) float32 logits`
+    synchronously; `submit()`/`step()` for micro-batched request flow;
+    `run_trace(seeds)` to replay a trace; `summary()` for metrics.
+    See docs/serving.md for the full request path.
+
+    Example
+    -------
+    >>> eng = ServingEngine(g, feat, GNNConfig(arch="gcn", in_dim=64))
+    >>> logits = eng.serve_batch([17, 42])          # (2, num_classes)
+    >>> eng.summary()["cache"]["hit_rate"]
+    """
 
     def __init__(self, graph: CSRGraph, feat: np.ndarray, cfg: GNNConfig, *,
                  params=None, key: Optional[jax.Array] = None,

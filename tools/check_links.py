@@ -1,0 +1,76 @@
+#!/usr/bin/env python3
+"""Docs link checker (CI): every relative link in README.md and docs/*.md
+must resolve to a file or directory in the repo.
+
+    python tools/check_links.py [files ...]      # default: README + docs/
+
+Checks markdown inline links `[text](target)` and bare reference paths in
+the "Docs" tables.  External links (http/https/mailto) and pure anchors
+(#...) are skipped; `target#anchor` is checked as `target`.  Exits non-zero
+listing every broken link.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def iter_links(md: pathlib.Path):
+    text = md.read_text(encoding="utf-8")
+    in_code = False
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        for m in LINK_RE.finditer(line):
+            yield lineno, m.group(1)
+
+
+def check(files) -> list[str]:
+    broken = []
+    for f in files:
+        md = pathlib.Path(f)
+        if not md.is_absolute():
+            md = REPO / md
+        for lineno, target in iter_links(md):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                try:
+                    shown = md.relative_to(REPO)
+                except ValueError:
+                    shown = md
+                broken.append(f"{shown}:{lineno}: broken link -> {target}")
+    return broken
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:])
+    if args:
+        files = args
+    else:
+        files = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+    missing = [str(f) for f in files if not pathlib.Path(f).exists()]
+    if missing:
+        print("missing input files:", *missing, sep="\n  ")
+        return 1
+    broken = check(files)
+    if broken:
+        print(*broken, sep="\n")
+        return 1
+    print(f"[check_links] OK: {len(files)} files, all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
