@@ -21,6 +21,7 @@ SECTIONS = [
     ("straggler fleet sim (runtime)", "benchmarks.bench_straggler"),
     ("serving engine (smoke)", "benchmarks.bench_serve"),
     ("train step fwd+bwd (smoke)", "benchmarks.bench_train"),
+    ("sampled mini-batch training (smoke)", "benchmarks.bench_sampling"),
     ("roofline (§Roofline)", "benchmarks.roofline"),
 ]
 

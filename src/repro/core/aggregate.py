@@ -39,11 +39,13 @@ class PlanExecutor:
 
     @classmethod
     def from_schedule(cls, sched: DeviceSchedule, *, dt: int, variant: str,
-                      backend: str = "pallas_interpret") -> "PlanExecutor":
+                      backend: str = "pallas_interpret",
+                      sched_bwd: DeviceSchedule = None) -> "PlanExecutor":
         """Plan-less executor over a bare schedule.
 
-        The serving engine's shared jitted forward rebuilds one per trace
-        from traced arrays, so the compiled executable closes over nothing
+        Shared jitted functions (the serving engine's forwards, the sampled
+        trainer's per-bucket step executables) rebuild one per trace from
+        traced arrays, so the compiled executable closes over nothing
         entry-specific.
 
         Arguments
@@ -54,9 +56,12 @@ class PlanExecutor:
             feature width at call time).
         variant : "folded" | "slot_onehot" — kernel gather variant.
         backend : see `repro.kernels.ops` Backend dispatch rules.
+        sched_bwd : optional TRANSPOSED-graph schedule (same duck typing);
+            when given the executor is differentiable on every backend —
+            the sampled mini-batch trainer passes one per layer block.
 
-        The result has no plan and no backward schedule: it is forward-only
-        (exactly what serving needs).  Example:
+        Without ``sched_bwd`` the result is forward-only (exactly what
+        serving needs).  Example:
 
         >>> ex = PlanExecutor.from_schedule(sched, dt=128, variant="folded")
         >>> out = ex(feat)                       # (N, D) float32
@@ -64,7 +69,7 @@ class PlanExecutor:
         ex = cls.__new__(cls)
         ex.plan = None
         ex.sched = sched
-        ex.sched_bwd = None
+        ex.sched_bwd = sched_bwd
         ex.backend = backend
         ex.dt = dt
         ex.variant = variant

@@ -26,23 +26,51 @@ __all__ = ["community_labels", "rcm_order", "renumber", "apply_renumbering"]
 
 
 def community_labels(g: CSRGraph, *, rounds: int = 8, seed: int = 0) -> np.ndarray:
-    """Label-propagation communities (compacted labels in [0, C))."""
+    """Label-propagation communities (compacted labels in [0, C)).
+
+    Fully vectorized semi-synchronous propagation: each round counts every
+    node's neighbor labels with one lexsort + run-length pass and updates a
+    seeded random half of the nodes to their plurality label (ties broken
+    toward the smallest label id, keeping the current label when it is
+    among the maxima).  Updating only half the nodes per round breaks the
+    two-coloring oscillation synchronous LPA is prone to while keeping the
+    whole round O(E log E) — the per-node Python loop this replaces was
+    unusable at full-size Type III scale (reddit: 11.6M edges), which the
+    neighbor-sampling pipeline now trains on.
+    """
     n = g.num_nodes
     labels = np.arange(n, dtype=np.int64)
+    if n == 0 or g.num_edges == 0:
+        return labels
     rng = np.random.default_rng(seed)
-    order = np.arange(n)
-    for _ in range(rounds):
-        rng.shuffle(order)
-        changed = 0
-        for v in order:
-            nbrs = g.neighbors(v)
-            if len(nbrs) == 0:
-                continue
-            vals, counts = np.unique(labels[nbrs], return_counts=True)
-            best = vals[np.argmax(counts)]
-            if best != labels[v]:
-                labels[v] = best
-                changed += 1
+    rows = np.repeat(np.arange(n, dtype=np.int64), g.degrees)
+    cols = g.indices.astype(np.int64)
+    for r in range(rounds):
+        nl = labels[cols]
+        order = np.lexsort((nl, rows))
+        r_s, l_s = rows[order], nl[order]
+        run = np.ones(len(r_s), dtype=bool)
+        run[1:] = (r_s[1:] != r_s[:-1]) | (l_s[1:] != l_s[:-1])
+        run_row = r_s[run]                      # (R,) per-run node id
+        run_label = l_s[run]                    # (R,) per-run label
+        counts = np.diff(np.append(np.flatnonzero(run), len(r_s)))
+        # plurality with stability: +0.5 keeps the current label when tied
+        score = counts.astype(np.float64)
+        score[run_label == labels[run_row]] += 0.5
+        # per-node argmax(score), ties -> smallest label: sort by
+        # (node, -score, label) and keep each node's first run
+        best = np.lexsort((run_label, -score, run_row))
+        first = np.ones(len(best), dtype=bool)
+        first[1:] = run_row[best][1:] != run_row[best][:-1]
+        upd_nodes = run_row[best][first]
+        upd_labels = run_label[best][first]
+        # semi-synchronous: flip a random half of the nodes each round
+        take = rng.random(len(upd_nodes)) < 0.5 if r < rounds - 1 else \
+            np.ones(len(upd_nodes), dtype=bool)
+        new_labels = labels.copy()
+        new_labels[upd_nodes[take]] = upd_labels[take]
+        changed = int((new_labels != labels).sum())
+        labels = new_labels
         if changed <= n // 200:
             break
     _, labels = np.unique(labels, return_inverse=True)
@@ -89,19 +117,10 @@ def renumber(g: CSRGraph, *, rounds: int = 8, seed: int = 0,
 
 
 def _induced(g: CSRGraph, members: np.ndarray) -> CSRGraph:
-    """Induced subgraph on `members` with local ids 0..len-1."""
-    n = g.num_nodes
-    local = -np.ones(n, dtype=np.int64)
-    local[members] = np.arange(len(members))
-    indptr = [0]
-    indices = []
-    for v in members:
-        nbrs = local[g.neighbors(v)]
-        nbrs = nbrs[nbrs >= 0]
-        indices.append(nbrs)
-        indptr.append(indptr[-1] + len(nbrs))
-    idx = (np.concatenate(indices) if indices else np.zeros(0)).astype(np.int32)
-    return CSRGraph(np.asarray(indptr, dtype=np.int64), idx)
+    """Induced subgraph on `members` with local ids 0..len-1 (vectorized;
+    `induced_subgraph` keeps rows in the given member order)."""
+    from repro.graphs.subgraph import induced_subgraph
+    return induced_subgraph(g, members)[0]
 
 
 def apply_renumbering(g: CSRGraph, perm: np.ndarray,

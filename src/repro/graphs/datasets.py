@@ -57,6 +57,7 @@ PAPER_DATASETS: Dict[str, DatasetSpec] = {
         DatasetSpec("twitter-partial", 580_768, 1_435_116, 1323, 2, "II"),
         DatasetSpec("sw-620h", 1_889_971, 3_944_206, 66, 2, "II"),
         # Type III
+        DatasetSpec("reddit", 232_965, 11_606_919, 602, 41, "III"),
         DatasetSpec("amazon0505", 410_236, 4_878_875, 96, 22, "III"),
         DatasetSpec("artist", 50_515, 1_638_396, 100, 12, "III", community_stddev=40.0),
         DatasetSpec("com-amazon", 334_863, 1_851_744, 96, 22, "III"),
@@ -71,11 +72,15 @@ def dataset_names() -> list[str]:
 
 
 def make_dataset(name: str, *, scale: float = 1.0, max_nodes: int | None = None,
-                 seed: int = 0) -> tuple[CSRGraph, DatasetSpec, np.ndarray]:
+                 seed: int = 0, max_dim: int | None = None,
+                 ) -> tuple[CSRGraph, DatasetSpec, np.ndarray]:
     """Generate (graph, spec, features) for a paper dataset replica.
 
     `scale` < 1 shrinks N and E proportionally (degree distribution and
-    community structure are preserved); `max_nodes` caps N.
+    community structure are preserved); `max_nodes` caps N.  `max_dim` caps
+    the generated feature width — full-size Type III graphs at their native
+    dims (reddit: 233k x 602) would materialize hundreds of MB of features
+    a sampled trainer then slices anyway.
     """
     spec = PAPER_DATASETS[name]
     n = int(spec.num_nodes * scale)
@@ -102,5 +107,6 @@ def make_dataset(name: str, *, scale: float = 1.0, max_nodes: int | None = None,
     else:
         g = random_power_law(n, avg_deg, seed=seed)
     rng = np.random.default_rng(seed + 1)
-    feat = rng.standard_normal((g.num_nodes, spec.dim)).astype(np.float32)
+    dim = spec.dim if max_dim is None else min(spec.dim, max_dim)
+    feat = rng.standard_normal((g.num_nodes, dim)).astype(np.float32)
     return g, spec, feat

@@ -73,8 +73,21 @@ def _gather_rows(g: CSRGraph, rows: np.ndarray) -> tuple[np.ndarray, np.ndarray]
 
 
 def k_hop_nodes(g: CSRGraph, seeds: np.ndarray, k: int) -> np.ndarray:
-    """All nodes reachable from `seeds` in <= k frontier hops (sorted)."""
+    """All nodes reachable from `seeds` in <= k frontier hops (sorted).
+
+    Seeds may repeat (deduplicated), be zero-degree (returned alone), or be
+    empty (empty result); ``k == 0`` returns the seed set itself.  Node
+    order is always sorted ascending — deterministic for cache keys.
+    """
     frontier = np.unique(np.asarray(seeds, dtype=np.int64))
+    if k < 0:
+        raise ValueError(f"hops must be >= 0, got {k}")
+    if len(frontier) and (frontier[0] < 0 or frontier[-1] >= g.num_nodes):
+        # catch this here: a negative id would silently WRAP (visited[-1]
+        # marks the last node) before any downstream IndexError fires
+        raise ValueError(
+            f"seed ids must be in [0, {g.num_nodes}), got "
+            f"[{frontier[0]}, {frontier[-1]}]")
     visited = np.zeros(g.num_nodes, dtype=bool)
     visited[frontier] = True
     for _ in range(k):
@@ -112,7 +125,13 @@ def induced_subgraph(g: CSRGraph, nodes: np.ndarray,
 
 def extract_ego(g: CSRGraph, seeds, hops: int,
                 edge_vals: Optional[np.ndarray] = None) -> EgoGraph:
-    """Multi-source k-hop ego-graph: the union ball of all `seeds`."""
+    """Multi-source k-hop ego-graph: the union ball of all `seeds`.
+
+    Inherits `k_hop_nodes`' edge-case contract (zero-degree / duplicate /
+    empty seeds, ``hops == 0``, bounds validation); duplicate seeds get
+    duplicate ``seed_local`` entries (one output row per request) while the
+    node set itself stays duplicate-free.
+    """
     seeds = np.atleast_1d(np.asarray(seeds, dtype=np.int64))
     nodes = k_hop_nodes(g, seeds, hops)
     sub, vals = induced_subgraph(g, nodes, edge_vals)

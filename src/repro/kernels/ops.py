@@ -50,7 +50,8 @@ from repro.kernels.group_aggregate import (group_aggregate_pallas,
 if TYPE_CHECKING:                      # avoid core<->kernels import cycle
     from repro.core.partition import GroupPartition
 
-__all__ = ["aggregate", "DeviceSchedule", "schedule_to_device"]
+__all__ = ["aggregate", "DeviceSchedule", "schedule_to_device",
+           "SchedView", "sched_arrays", "sched_statics"]
 
 Backend = Literal["pallas", "pallas_interpret", "xla"]
 
@@ -90,6 +91,59 @@ class DeviceSchedule:
 
 def schedule_to_device(p: "GroupPartition") -> DeviceSchedule:
     return DeviceSchedule(p)
+
+
+# --- schedule (arrays, statics) split -------------------------------------
+#
+# The custom VJP below must work when the schedule tensors are jit ARGUMENTS
+# (tracers), not closure constants: the sampled mini-batch trainer compiles
+# ONE step executable per shape bucket and feeds each batch's schedules in as
+# data.  `jax.custom_vjp` forbids tracers in nondiff_argnums, so a schedule
+# is split into a pytree of arrays (traced) and a hashable tuple of static
+# ints (nondiff) and rebuilt inside via `SchedView`.
+
+_SCHED_ARRAY_FIELDS = ("nbrs", "edge_val", "local_node", "tile_node_block",
+                       "tile_window", "edge_slot", "edge_pos", "edge_perm")
+# num_edges deliberately NOT part of the static signature: raw edge counts
+# are unbucketed and nothing in the compute path reads them — including
+# them would defeat shape bucketing (one retrace per distinct edge count).
+_SCHED_STATIC_FIELDS = ("gs", "gpt", "ont", "src_win", "num_nodes",
+                        "padded_src_rows", "padded_out_rows")
+
+
+def sched_arrays(s) -> tuple:
+    """The schedule's array members as a pytree (missing members -> None)."""
+    return tuple(getattr(s, f, None) for f in _SCHED_ARRAY_FIELDS)
+
+
+def sched_statics(s) -> tuple:
+    """The schedule's static ints as a hashable tuple."""
+    return tuple(int(getattr(s, f)) for f in _SCHED_STATIC_FIELDS)
+
+
+class SchedView:
+    """Duck-typed DeviceSchedule rebuilt from (arrays, statics).
+
+    Arrays may be jax tracers — this is how schedule tensors flow through a
+    shared jitted function as arguments (serving's shared forwards, the
+    sampled trainer's per-bucket step executables)."""
+
+    def __init__(self, arrays: tuple, statics: tuple):
+        for f, a in zip(_SCHED_ARRAY_FIELDS, arrays):
+            setattr(self, f, a)
+        for f, v in zip(_SCHED_STATIC_FIELDS, statics):
+            setattr(self, f, v)
+        self.num_tiles = int(self.nbrs.shape[0])
+
+
+def _zero_cotangents(arrs: tuple):
+    """Zero cotangents for a schedule-array pytree: float0 for integer
+    arrays (jax's tangent type for int primals), real zeros for floats."""
+    return jax.tree_util.tree_map(
+        lambda x: (jnp.zeros_like(x)
+                   if jnp.issubdtype(x.dtype, jnp.floating)
+                   else np.zeros(x.shape, jax.dtypes.float0)),
+        arrs)
 
 
 def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
@@ -135,7 +189,15 @@ def _aggregate_impl(feat: jax.Array, sched: DeviceSchedule, *,
         dt=dt_eff, out_rows=sched.padded_out_rows,
         variant=variant, interpret=(backend == "pallas_interpret"),
     )
-    return out[:n, :d]
+    # The kernel zeroes an output block on its FIRST VISIT (leader-node
+    # flush), so node blocks no tile names are never written and the
+    # out_shape buffer is undefined there.  Full graphs visit every block;
+    # bipartite sampled blocks (edge-less rows past num_dst) do not — mask
+    # unvisited blocks to true zeros.
+    nblk = sched.padded_out_rows // sched.ont
+    visited = jnp.zeros((nblk,), jnp.bool_).at[sched.tile_node_block].set(True)
+    return jnp.where(jnp.repeat(visited, sched.ont)[:n, None],
+                     out[:n, :d], 0.0)
 
 
 def _edge_cotangent(g_out: jax.Array, feat: jax.Array,
@@ -166,22 +228,32 @@ def _edge_cotangent(g_out: jax.Array, feat: jax.Array,
 
 # --- the differentiable wrapper: forward over the CSR schedule, backward
 # --- over the transposed (CSC) schedule — "the transpose of aggregation is
-# --- aggregation over the transposed graph".
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
-def _aggregate_diff(feat, edge_values, sched, sched_bwd, dt, backend, variant):
-    return _aggregate_impl(feat, sched, dt=dt, backend=backend,
-                           variant=variant, edge_values=edge_values)
+# --- aggregation over the transposed graph".  Schedule ARRAYS are primal
+# --- args (they may be tracers inside a shared jitted step); only the
+# --- static ints + dispatch options ride in nondiff_argnums.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _aggregate_diff(statics, statics_bwd, opts, feat, edge_values, arrs,
+                    arrs_bwd):
+    dt, backend, variant = opts
+    return _aggregate_impl(feat, SchedView(arrs, statics), dt=dt,
+                           backend=backend, variant=variant,
+                           edge_values=edge_values)
 
 
-def _aggregate_diff_fwd(feat, edge_values, sched, sched_bwd, dt, backend,
-                        variant):
-    out = _aggregate_impl(feat, sched, dt=dt, backend=backend,
-                          variant=variant, edge_values=edge_values)
-    return out, (feat, edge_values)
+def _aggregate_diff_fwd(statics, statics_bwd, opts, feat, edge_values, arrs,
+                        arrs_bwd):
+    dt, backend, variant = opts
+    out = _aggregate_impl(feat, SchedView(arrs, statics), dt=dt,
+                          backend=backend, variant=variant,
+                          edge_values=edge_values)
+    return out, (feat, edge_values, arrs, arrs_bwd)
 
 
-def _aggregate_diff_bwd(sched, sched_bwd, dt, backend, variant, res, g_out):
-    feat, edge_values = res
+def _aggregate_diff_bwd(statics, statics_bwd, opts, res, g_out):
+    feat, edge_values, arrs, arrs_bwd = res
+    dt, backend, variant = opts
+    sched = SchedView(arrs, statics)
+    sched_bwd = SchedView(arrs_bwd, statics_bwd)
     g_out = g_out.astype(jnp.float32)
     if edge_values is None:
         ev_bwd = None            # sched_bwd.edge_val holds the transposed vals
@@ -193,7 +265,8 @@ def _aggregate_diff_bwd(sched, sched_bwd, dt, backend, variant, res, g_out):
                                  ).astype(edge_values.dtype)
     feat_bar = _aggregate_impl(g_out, sched_bwd, dt=dt, backend=backend,
                                variant=variant, edge_values=ev_bwd)
-    return feat_bar.astype(feat.dtype), ev_bar
+    return (feat_bar.astype(feat.dtype), ev_bar,
+            _zero_cotangents(arrs), _zero_cotangents(arrs_bwd))
 
 
 _aggregate_diff.defvjp(_aggregate_diff_fwd, _aggregate_diff_bwd)
@@ -226,5 +299,6 @@ def aggregate(feat: jax.Array, sched: DeviceSchedule, *,
         raise ValueError(
             "dynamic edge_values need a backward schedule with edge_perm "
             "(build it via transpose_graph / plan_for(with_backward=True))")
-    return _aggregate_diff(feat, edge_values, sched, sched_bwd, dt, backend,
-                           variant)
+    return _aggregate_diff(sched_statics(sched), sched_statics(sched_bwd),
+                           (dt, backend, variant), feat, edge_values,
+                           sched_arrays(sched), sched_arrays(sched_bwd))

@@ -34,7 +34,8 @@ from repro.graphs.csr import CSRGraph
 Pytree = Any
 
 __all__ = ["GNNConfig", "gcn_edge_values", "build_gnn", "init_gnn_params",
-           "GNNModel", "make_gnn_train_step", "planted_labels"]
+           "GNNModel", "make_gnn_train_step", "planted_labels",
+           "gnn_block_logits", "gnn_block_loss", "structural_labels"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,15 +124,74 @@ class GNNModel:
 
     def loss(self, params: Pytree, feat: jax.Array, labels: jax.Array,
              mask: Optional[jax.Array] = None):
-        lg = self.logits(params, feat)
-        logp = jax.nn.log_softmax(lg, axis=-1)
-        per = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
-        if mask is None:
-            mask = jnp.ones_like(per)
-        denom = jnp.maximum(mask.sum(), 1.0)
-        loss = (per * mask).sum() / denom
-        acc = ((lg.argmax(-1) == labels) * mask).sum() / denom
-        return loss, {"loss": loss, "accuracy": acc}
+        return _masked_xent(self.logits(params, feat), labels, mask)
+
+
+def _masked_xent(lg: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None):
+    """Masked softmax cross-entropy + accuracy over (N, C) logits."""
+    logp = jax.nn.log_softmax(lg, axis=-1)
+    per = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    if mask is None:
+        mask = jnp.ones_like(per)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (per * mask).sum() / denom
+    acc = ((lg.argmax(-1) == labels) * mask).sum() / denom
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def gnn_block_logits(cfg: GNNConfig, params: Pytree, feat: jax.Array,
+                     executors) -> jax.Array:
+    """Sampled mini-batch forward: one bipartite block per layer.
+
+    ``executors[l]`` aggregates layer l's block (square CSR with the
+    block's source frontier as node set, dst nodes occupying the leading
+    consecutive local ids — `repro.sampling.neighbor`).  ``feat`` is
+    (num_src_0, in_dim) in block 0's local order.  After each layer the
+    activation is cropped to the next block's (padded) source count; the
+    rows dropped are exactly the nodes no deeper layer consumes.  Returns
+    (num_nodes_last, num_classes) — rows beyond the seed count are padding
+    (mask them in the loss).
+
+    GCN keeps its reduce-dim-first placement; GIN aggregates full-dim then
+    applies its MLP.  GAT needs per-block dynamic edge plumbing that the
+    sampled path does not carry yet.
+    """
+    if cfg.arch not in ("gcn", "gin"):
+        raise NotImplementedError(
+            f"sampled block forward supports gcn/gin, not {cfg.arch!r}")
+    x = feat
+    for i, ex in enumerate(executors):
+        w = params[f"w{i}"]
+        if cfg.arch == "gcn":
+            x = ex(x.astype(jnp.float32) @ w)
+            if i < cfg.num_layers - 1:
+                x = jax.nn.relu(x)
+        else:
+            agg = ex(x.astype(jnp.float32))
+            h = (1.0 + cfg.gin_eps) * x.astype(jnp.float32) + agg
+            x = jax.nn.relu(h @ w) @ params[f"w{i}b"]
+        if i + 1 < len(executors):
+            x = x[: executors[i + 1].sched.num_nodes]
+    return x
+
+
+def gnn_block_loss(cfg: GNNConfig, params: Pytree, feat: jax.Array,
+                   labels: jax.Array, mask: jax.Array, executors):
+    """Masked loss over a sampled mini-batch's block chain (labels/mask are
+    (num_nodes_last,); mask is 0 on shape-bucket padding rows)."""
+    return _masked_xent(gnn_block_logits(cfg, params, feat, executors),
+                        labels, mask)
+
+
+def structural_labels(g: CSRGraph, num_classes: int) -> np.ndarray:
+    """Degree-quantile node labels — a deterministic, aggregation-learnable
+    task that needs NO full-graph teacher forward (the `planted_labels`
+    teacher is itself a full-batch inference pass, which is exactly what
+    full-size Type III graphs cannot afford; sampled training uses this)."""
+    deg = g.degrees.astype(np.float64)
+    qs = np.quantile(deg, np.linspace(0, 1, num_classes + 1)[1:-1])
+    return np.searchsorted(qs, deg, side="right").astype(np.int32)
 
 
 def build_gnn(g: CSRGraph, cfg: GNNConfig, *, key: Optional[jax.Array] = None,

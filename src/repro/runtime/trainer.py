@@ -53,6 +53,17 @@ class Trainer:
 
     batch_fn(step) -> batch pytree (deterministic in step — the restart
     contract).  Restores from the newest checkpoint if one exists.
+
+    batch_fn may be any step-indexed callable, including a stateful batch
+    SOURCE like the sampled mini-batch loader
+    (`repro.sampling.SampledLoader`): its prefetch thread rides along
+    transparently because determinism-in-step makes the restart path a
+    plain resync.  Sources exposing ``close()`` are shut down by
+    `Trainer.close()` (drivers call it when training ends).
+
+    Likewise ``batch`` need not be an array pytree — step_fn is invoked
+    uninspected, so schedule-carrying batches (`sampling.TrainBatch`) flow
+    through; only the returned metrics must be float()-able scalars.
     """
 
     def __init__(self, cfg: TrainerConfig, step_fn: Callable,
@@ -125,3 +136,12 @@ class Trainer:
                 self._maybe_restore()
         self.ckpt.wait()
         return self.state
+
+    def close(self):
+        """Flush checkpoints and shut down a closable batch source (the
+        sampled loader's prefetch thread).  Idempotent; `run` can no longer
+        be called afterwards if the batch source owned live resources."""
+        self.ckpt.wait()
+        closer = getattr(self.batch_fn, "close", None)
+        if callable(closer):
+            closer()

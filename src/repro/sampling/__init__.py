@@ -1,0 +1,23 @@
+"""Neighbor-sampled mini-batch GNN training.
+
+`neighbor` builds per-layer bipartite message-flow blocks by seeded fanout
+sampling; `loader` streams padded, advisor-planned batches through a
+prefetch thread and compiles one train-step executable per shape bucket.
+See docs/sampling.md.
+"""
+from repro.sampling.loader import (LoaderConfig, SampledLoader,
+                                   SampledTrainStep, TrainBatch)
+from repro.sampling.neighbor import (Block, SampledBatch, block_aggregate_ref,
+                                     sample_blocks, sample_frontier)
+
+__all__ = [
+    "Block",
+    "SampledBatch",
+    "sample_frontier",
+    "sample_blocks",
+    "block_aggregate_ref",
+    "LoaderConfig",
+    "TrainBatch",
+    "SampledLoader",
+    "SampledTrainStep",
+]

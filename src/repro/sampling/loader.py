@@ -1,0 +1,358 @@
+"""Mini-batch loader + train step for neighbor-sampled GNN training.
+
+`SampledLoader` turns a resident graph + features + labels into a
+deterministic stream of device-ready `TrainBatch`es:
+
+  1. seeds for step s are a slice of a per-epoch permutation (seeded by
+     ``(seed, epoch)``), and the fanout sampler is seeded by ``(seed,
+     step)`` — ``batch_for(step)`` is a pure function of the step index,
+     which is the `runtime.Trainer` restart contract;
+  2. every block is padded to pow2 *node* buckets (`pad_to_nodes` +
+     `bucket_pow2`) and planned through a `PlanCache` (``with_backward``
+     per backend), whose ``bucket_shapes`` mode pads *tile* counts to pow2
+     — so the step executable sees a small recurring set of operand shapes;
+  3. a background thread prefetches batches into a double buffer
+     (``prefetch=2``): host-side sampling + planning for step s+1 overlaps
+     device compute for step s.  Out-of-order requests (a Trainer restart)
+     flush the buffer and resync — determinism makes that loss-free.
+
+`SampledTrainStep` is the matching ``step_fn(state, batch)``: it keeps ONE
+jitted executable per shape bucket and feeds each batch's schedule tensors
+in as ARGUMENTS (`kernels.ops.SchedView`), so two batches with different
+raw sizes but the same bucket reuse one compilation — the payoff of pow2
+bucketing, now on the training path.  On Pallas backends the executable's
+backward pass runs through the transposed-schedule kernel (the plans carry
+``partition_bwd``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+from repro.graphs.subgraph import pad_to_nodes
+from repro.models.gnn import GNNConfig, gnn_block_loss
+from repro.sampling.neighbor import SampledBatch, sample_blocks
+from repro.serving.plan_cache import PlanCache, bucket_pow2
+
+__all__ = ["LoaderConfig", "TrainBatch", "SampledLoader", "SampledTrainStep",
+           "sampled_agg_config"]
+
+
+def sampled_agg_config(g: CSRGraph):
+    """Schedule knobs for fanout-sampled bipartite blocks.
+
+    The §7 tuner's kernel model prices full graphs, where most
+    (node_block, window) buckets are dense; sampled blocks are the opposite
+    — a few fanout-bounded edges scattered over a wide frontier — and a
+    full-graph-style config (small ``src_win``, large ``gpt``) explodes
+    into ~99.7% padded slots (measured 4.5k× slower on a reddit block).
+    Wide windows (~num_nodes/8, so every block sees a handful of windows)
+    with small groups-per-tile keep bucket padding bounded: slot counts
+    drop ~100× and the XLA step goes from seconds to milliseconds.
+    """
+    from repro.core.model import AggConfig
+    src_win = min(max(bucket_pow2(max(g.num_nodes // 8, 1)), 256), 4096)
+    return AggConfig(gs=8, gpt=8, dt=128, src_win=src_win, ont=8,
+                     variant="folded")
+
+
+@dataclasses.dataclass(frozen=True)
+class LoaderConfig:
+    fanouts: tuple                  # per-layer fanout, forward order
+    batch_nodes: int                # seeds per mini-batch
+    seed: int = 0
+    bucket_shapes: bool = True      # pow2 node/tile shape bucketing
+    prefetch: int = 2               # double buffering depth
+    drop_last: bool = True          # keep every batch the same seed count
+    use_tuner: bool = False         # False: `sampled_agg_config` heuristic
+    tune_mode: str = "model"
+    tune_iters: int = 4
+    max_plans: int = 32
+
+
+@dataclasses.dataclass
+class TrainBatch:
+    """One device-ready sampled mini-batch."""
+
+    feat: np.ndarray                # (P0, in_dim) padded input features
+    labels: np.ndarray              # (P_last,) int32, padded with 0
+    mask: np.ndarray                # (P_last,) float32, 1.0 on real seeds
+    entries: list                   # per-layer plan-cache CacheEntry
+    seeds: np.ndarray               # (B,) global seed ids
+    num_seeds: int
+    step: int
+    key: tuple                      # jit-bucket signature (statics + shapes)
+    raw_nodes: tuple                # per-block UNPADDED src counts
+    raw_edges: tuple                # per-block UNPADDED edge counts
+
+
+class SampledLoader:
+    """Deterministic, prefetching mini-batch source (see module doc).
+
+    Callable — ``loader(step)`` returns the batch for ``step`` (through the
+    prefetch buffer), so it drops straight into `Trainer(batch_fn=loader)`.
+    Use as a context manager or call `close()` to stop the worker thread.
+    """
+
+    def __init__(self, g: CSRGraph, feat: np.ndarray, labels: np.ndarray,
+                 cfg: GNNConfig, loader: LoaderConfig, *,
+                 train_nodes: Optional[np.ndarray] = None,
+                 cache: Optional[PlanCache] = None,
+                 with_backward: Optional[bool] = None,
+                 start_thread: bool = True):
+        if cfg.arch not in ("gcn", "gin"):
+            # fail at construction, not minutes later inside the first
+            # jitted step (gat needs per-block dynamic-edge plumbing the
+            # sampled path does not carry)
+            raise ValueError(
+                f"sampled training supports gcn/gin, not {cfg.arch!r}")
+        if len(loader.fanouts) != cfg.num_layers:
+            raise ValueError(
+                f"fanouts {loader.fanouts} must name one fanout per layer "
+                f"(num_layers={cfg.num_layers})")
+        assert feat.shape == (g.num_nodes, cfg.in_dim), \
+            (feat.shape, g.num_nodes, cfg.in_dim)
+        self.g = g
+        self.feat = np.ascontiguousarray(feat, dtype=np.float32)
+        self.labels = np.ascontiguousarray(labels, dtype=np.int32)
+        self.cfg = cfg
+        self.lc = loader
+        self.train_nodes = (np.arange(g.num_nodes, dtype=np.int64)
+                            if train_nodes is None
+                            else np.asarray(train_nodes, dtype=np.int64))
+        if with_backward is None:
+            with_backward = cfg.backend.startswith("pallas")
+        self.cache = cache if cache is not None else PlanCache(
+            backend=cfg.backend, tune_mode=loader.tune_mode,
+            tune_iters=loader.tune_iters, max_entries=loader.max_plans,
+            bucket_shapes=loader.bucket_shapes, seed=loader.seed,
+            with_backward=with_backward,
+            config_fn=None if loader.use_tuner else sampled_agg_config)
+        self.edge_mode = "gcn" if cfg.arch == "gcn" else "scale"
+        n = len(self.train_nodes)
+        b = min(loader.batch_nodes, n)
+        self.steps_per_epoch = max(
+            n // b if loader.drop_last else -(-n // b), 1)
+        self._epoch_perm_cache: tuple[int, np.ndarray] = (-1, None)
+        # prefetch state
+        self._cond = threading.Condition()
+        self._buf: dict[int, TrainBatch] = {}
+        self._head = 0                  # next step the worker picks up
+        self._inflight: Optional[int] = None  # step the worker is computing
+        self._last_req = 0              # most recently consumed/requested step
+        self._stop = False
+        self._err: Optional[BaseException] = None
+        self._thread = None
+        if start_thread and loader.prefetch > 0:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    # ---------------- deterministic batch construction ----------------
+
+    def _epoch_perm(self, epoch: int) -> np.ndarray:
+        cached_epoch, perm = self._epoch_perm_cache
+        if cached_epoch != epoch:
+            rng = np.random.default_rng((self.lc.seed, 0x5eed, epoch))
+            perm = rng.permutation(self.train_nodes)
+            self._epoch_perm_cache = (epoch, perm)
+        return perm
+
+    def seeds_for(self, step: int) -> np.ndarray:
+        epoch, pos = divmod(step, self.steps_per_epoch)
+        b = min(self.lc.batch_nodes, len(self.train_nodes))
+        return self._epoch_perm(epoch)[pos * b:(pos + 1) * b]
+
+    def batch_for(self, step: int) -> TrainBatch:
+        """Pure: sample + pad + plan the batch for ``step`` (no buffer)."""
+        cfg, lc = self.cfg, self.lc
+        sb = sample_blocks(self.g, self.seeds_for(step), lc.fanouts,
+                           rng=np.random.default_rng((lc.seed, 1, step)),
+                           edge_mode=self.edge_mode)
+        entries, key_parts = [], []
+        for blk in sb.blocks:
+            sub = blk.graph
+            if lc.bucket_shapes:
+                sub = pad_to_nodes(sub, bucket_pow2(sub.num_nodes))
+            ent = self.cache.get_or_build(
+                sub, arch=cfg.arch, in_dim=cfg.in_dim,
+                hidden_dim=cfg.hidden_dim, num_layers=cfg.num_layers,
+                edge_vals=blk.edge_vals)
+            entries.append(ent)
+            acfg = ent.plan.config
+            key_parts.append((
+                acfg.gs, acfg.gpt, acfg.ont, acfg.src_win, acfg.dt,
+                acfg.variant, sub.num_nodes,
+                ent.executor.sched.num_tiles,
+                None if ent.executor.sched_bwd is None
+                else ent.executor.sched_bwd.num_tiles))
+        p0 = entries[0].executor.sched.num_nodes
+        p_last = entries[-1].executor.sched.num_nodes
+        feat = np.zeros((p0, cfg.in_dim), np.float32)
+        feat[:len(sb.input_nodes)] = self.feat[sb.input_nodes]
+        labels = np.zeros(p_last, np.int32)
+        labels[:len(sb.seeds)] = self.labels[sb.seeds]
+        mask = np.zeros(p_last, np.float32)
+        mask[:len(sb.seeds)] = 1.0
+        return TrainBatch(
+            feat=feat, labels=labels, mask=mask, entries=entries,
+            seeds=sb.seeds, num_seeds=len(sb.seeds), step=step,
+            key=(cfg.arch, cfg.backend, p0, tuple(key_parts)),
+            raw_nodes=tuple(b.num_src for b in sb.blocks),
+            raw_edges=tuple(b.graph.num_edges for b in sb.blocks))
+
+    # ---------------- prefetching front ----------------
+
+    def __call__(self, step: int) -> TrainBatch:
+        if self._thread is None:
+            return self.batch_for(step)
+        with self._cond:
+            if self._err is not None:
+                raise RuntimeError("sample loader worker died") from self._err
+            self._last_req = step
+            if (step not in self._buf and step != self._head
+                    and step != self._inflight):
+                # restart / out-of-order access (the step is neither
+                # buffered, being computed, nor next in line): resync
+                self._buf.clear()
+                self._head = step
+                self._cond.notify_all()
+            while step not in self._buf:
+                if self._err is not None:
+                    raise RuntimeError(
+                        "sample loader worker died") from self._err
+                self._cond.wait(timeout=0.5)
+            batch = self._buf.pop(step)
+            self._cond.notify_all()
+            return batch
+
+    batch_fn = __call__
+
+    def _worker(self):
+        try:
+            while True:
+                with self._cond:
+                    while not self._stop and len(self._buf) >= self.lc.prefetch:
+                        self._cond.wait(timeout=0.5)
+                    if self._stop:
+                        return
+                    step = self._head
+                    self._head += 1
+                    self._inflight = step
+                batch = self.batch_for(step)       # heavy work, lock-free
+                with self._cond:
+                    self._inflight = None
+                    if self._stop:
+                        return
+                    # drop the result if a resync moved past it (keeping it
+                    # would pin a never-consumed entry in the buffer)
+                    if step >= self._last_req:
+                        self._buf[step] = batch
+                    self._cond.notify_all()
+        except BaseException as e:                 # propagate to consumer
+            with self._cond:
+                self._err = e
+                self._cond.notify_all()
+
+    def close(self):
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def stats(self) -> dict:
+        return {"cache": self.cache.stats(),
+                "steps_per_epoch": self.steps_per_epoch}
+
+
+class SampledTrainStep:
+    """``step_fn(state, batch)`` over sampled blocks, one jit per bucket.
+
+    ``state = (params, opt_state)``; ``batch`` is a `TrainBatch`.  The
+    jitted executable takes every schedule tensor as an argument, so all
+    batches sharing ``batch.key`` (and therefore shapes) reuse one
+    compilation; ``self.traces`` counts actual trace events (the
+    bucket-reuse assertion in tests/bench).
+    """
+
+    def __init__(self, cfg: GNNConfig, opt, *, jit: bool = True):
+        self.cfg = cfg
+        self.opt = opt
+        self.jit = jit
+        self._fns: dict[tuple, object] = {}
+        self.traces = 0
+
+    def __call__(self, state, batch: TrainBatch):
+        fn = self._fns.get(batch.key)
+        if fn is None:
+            fn = self._fns[batch.key] = self._build(batch)
+        return fn(state, batch.feat, batch.labels, batch.mask,
+                  self._block_args(batch))
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self._fns)
+
+    @staticmethod
+    def _block_args(batch: TrainBatch) -> tuple:
+        from repro.kernels.ops import sched_arrays
+
+        def arrs(sched):
+            # strip edge_slot/edge_pos/edge_perm: they are (E,) in the RAW
+            # edge count (unbucketed — would retrace every batch) and only
+            # the dynamic-edge-value path reads them, which the sampled
+            # trainer never takes (static GCN/GIN edge values).
+            return sched_arrays(sched)[:5] + (None, None, None)
+
+        out = []
+        for ent in batch.entries:
+            ex = ent.executor
+            out.append((arrs(ex.sched),
+                        None if ex.sched_bwd is None else arrs(ex.sched_bwd)))
+        return tuple(out)
+
+    def _build(self, batch: TrainBatch):
+        import jax
+
+        from repro.core.aggregate import PlanExecutor
+        from repro.kernels.ops import SchedView, sched_statics
+        from repro.optim.adamw import adamw_update
+
+        cfg, opt = self.cfg, self.opt
+        statics = []
+        for ent in batch.entries:
+            ex = ent.executor
+            acfg = ent.plan.config
+            statics.append((sched_statics(ex.sched),
+                            None if ex.sched_bwd is None
+                            else sched_statics(ex.sched_bwd),
+                            acfg.dt, acfg.variant))
+
+        def step(state, feat, labels, mask, blocks):
+            self.traces += 1                       # trace-time side effect
+            execs = []
+            for (st_f, st_b, dt, variant), (a_f, a_b) in zip(statics, blocks):
+                execs.append(PlanExecutor.from_schedule(
+                    SchedView(a_f, st_f), dt=dt, variant=variant,
+                    backend=cfg.backend,
+                    sched_bwd=None if a_b is None else SchedView(a_b, st_b)))
+            params, opt_state = state
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: gnn_block_loss(cfg, p, feat, labels, mask, execs),
+                has_aux=True)(params)
+            params, opt_state, om = adamw_update(opt, grads, opt_state,
+                                                 params)
+            return (params, opt_state), {**metrics, **om}
+
+        return jax.jit(step) if self.jit else step

@@ -117,13 +117,27 @@ class PlanCache:
 
     def __init__(self, *, backend: str = "xla", tune_mode: str = "model",
                  tune_iters: int = 8, max_entries: int = 64,
-                 bucket_shapes: bool = True, seed: int = 0):
+                 bucket_shapes: bool = True, seed: int = 0,
+                 with_backward: bool = False, config_fn=None):
         self.backend = backend
         self.tune_mode = tune_mode
         self.tune_iters = tune_iters
         self.max_entries = max_entries
         self.bucket_shapes = bucket_shapes
         self.seed = seed
+        # config_fn: optional (CSRGraph) -> AggConfig consulted on a
+        # fingerprint MISS instead of running the tuner — callers who know
+        # their workload shape class (the sampled loader's fanout-bounded
+        # blocks, whose near-empty (row, window) buckets the full-graph
+        # kernel model prices wrong) supply a heuristic; the memo and the
+        # two-level hit accounting behave exactly as with the tuner.
+        self.config_fn = config_fn
+        # with_backward: every built plan also carries the transposed-graph
+        # schedule (`plan_for(with_backward=True)`) so cached entries are
+        # train-ready — the sampled mini-batch loader's mode.  Backward tile
+        # counts are pow2-padded alongside the forward ones so the training
+        # step's jit cache buckets both directions.
+        self.with_backward = with_backward
         self._plans: "OrderedDict[tuple, CacheEntry]" = OrderedDict()
         self._configs: dict[tuple, AggConfig] = {}
         self.exact_hits = 0
@@ -134,7 +148,8 @@ class PlanCache:
     def get_or_build(self, g: CSRGraph, *, arch: str, in_dim: int,
                      hidden_dim: int, num_layers: int,
                      edge_vals: Optional[np.ndarray] = None) -> CacheEntry:
-        arch_key = (arch, in_dim, hidden_dim, num_layers)
+        arch_key = (arch, in_dim, hidden_dim, num_layers) + (
+            ("bwd",) if self.with_backward else ())
         key = graph_key(g, edge_vals, arch_key)
         ent = self._plans.get(key)
         if ent is not None:
@@ -149,16 +164,25 @@ class PlanCache:
             self.config_hits += 1
         else:
             self.misses += 1
+            if self.config_fn is not None:
+                config = self.config_fn(g)
+                self._configs[fp] = config
         plan = plan_for(g, arch=arch, in_dim=in_dim, hidden_dim=hidden_dim,
                         num_layers=num_layers, edge_vals=edge_vals,
                         config=config, tune_mode=self.tune_mode,
-                        tune_iters=self.tune_iters, seed=self.seed)
+                        tune_iters=self.tune_iters, seed=self.seed,
+                        with_backward=self.with_backward)
         if config is None:
             self._configs[fp] = plan.config
         if self.bucket_shapes:
             part = pad_partition_tiles(
                 plan.partition, bucket_pow2(plan.partition.num_tiles))
-            plan = dataclasses.replace(plan, partition=part)
+            part_bwd = plan.partition_bwd
+            if part_bwd is not None:
+                part_bwd = pad_partition_tiles(
+                    part_bwd, bucket_pow2(part_bwd.num_tiles))
+            plan = dataclasses.replace(plan, partition=part,
+                                       partition_bwd=part_bwd)
         ent = CacheEntry(plan=plan,
                          executor=PlanExecutor(plan, backend=self.backend))
         self._plans[key] = ent

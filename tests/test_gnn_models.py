@@ -91,7 +91,7 @@ def test_paper_dataset_replicas():
         assert g.num_nodes <= 2000 * 1.3
         assert feat.shape == (g.num_nodes, spec.dim)
         assert g.num_edges > 0
-    assert len(PAPER_DATASETS) == 15
+    assert len(PAPER_DATASETS) == 16       # Table 1 replicas + reddit
 
 
 def test_gat_matches_dense_oracle(community_graph, rng):

@@ -1,0 +1,330 @@
+"""Neighbor-sampled mini-batch training subsystem.
+
+Covers: fanout bounds + block structure, seeded determinism, unbiasedness
+of the sampled GCN estimator against the full-graph operator, pow2 shape
+bucketing (same jit executable + plan-cache config across different raw
+sizes), Pallas-backward grad parity on a fixed batch, the prefetching
+loader's determinism/restart contract, and the `graphs.subgraph` edge
+cases the sampler leans on.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregate import PlanExecutor
+from repro.graphs.csr import CSRGraph, from_edges, random_power_law
+from repro.graphs.subgraph import extract_ego, k_hop_nodes
+from repro.models.gnn import (GNNConfig, gcn_edge_values, gnn_block_loss,
+                              init_gnn_params, structural_labels)
+from repro.sampling import (LoaderConfig, SampledLoader, SampledTrainStep,
+                            block_aggregate_ref, sample_blocks)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return random_power_law(400, 8.0, seed=0)
+
+
+# ------------------------------------------------------------- block sampler
+
+def test_fanout_bounds_and_scaling(graph):
+    seeds = np.array([0, 7, 42, 399])
+    fanout = 3
+    sb = sample_blocks(graph, seeds, [fanout], seed=1)
+    blk = sb.blocks[0]
+    for i, s in enumerate(seeds):
+        nbrs = blk.graph.neighbors(i)
+        vals = blk.edge_vals[blk.graph.indptr[i]:blk.graph.indptr[i + 1]]
+        self_loops = (blk.src_nodes[nbrs] == s).sum()
+        assert self_loops == 1                      # exactly one self-loop
+        assert len(nbrs) - 1 <= fanout              # fanout bound
+        assert len(nbrs) - 1 == min(graph.degrees[s], fanout)
+        assert (vals > 0).all()
+
+
+def test_block_chain_contract(graph):
+    sb = sample_blocks(graph, [5, 9, 300], [4, 2], seed=3)
+    assert sb.num_layers == 2
+    b0, b1 = sb.blocks
+    # dst nodes occupy the leading consecutive local ids of the src frontier
+    np.testing.assert_array_equal(b0.src_nodes[:b0.num_dst], b1.src_nodes)
+    np.testing.assert_array_equal(b1.src_nodes[:b1.num_dst], sb.seeds)
+    assert np.array_equal(sb.input_nodes, b0.src_nodes)
+    # rows past num_dst are edge-less
+    assert b0.graph.indptr[b0.num_dst] == b0.graph.num_edges
+    # duplicate seeds dedup, deterministic ordering
+    sb2 = sample_blocks(graph, [300, 5, 9, 5], [4, 2], seed=3)
+    np.testing.assert_array_equal(sb2.seeds, sb.seeds)
+
+
+def test_seeded_determinism(graph):
+    a = sample_blocks(graph, [1, 2, 3], [5, 3], seed=11)
+    b = sample_blocks(graph, [1, 2, 3], [5, 3], seed=11)
+    c = sample_blocks(graph, [1, 2, 3], [5, 3], seed=12)
+    for x, y in zip(a.blocks, b.blocks):
+        np.testing.assert_array_equal(x.graph.indices, y.graph.indices)
+        np.testing.assert_array_equal(x.src_nodes, y.src_nodes)
+        np.testing.assert_allclose(x.edge_vals, y.edge_vals)
+    assert any(not np.array_equal(x.graph.indices, y.graph.indices)
+               or len(x.graph.indices) != len(y.graph.indices)
+               for x, y in zip(a.blocks, c.blocks))
+
+
+def test_sampled_gcn_aggregation_is_unbiased(graph):
+    """Mean over many seeded draws of the one-layer sampled estimator must
+    approach the full-graph A-hat aggregation at the seeds."""
+    rng = np.random.default_rng(0)
+    feat = rng.standard_normal((graph.num_nodes, 4)).astype(np.float32)
+    seeds = np.array([3, 50, 120, 399])
+    g2, vals = gcn_edge_values(graph)
+    rows, cols = g2.to_coo()
+    full = np.zeros((graph.num_nodes, 4))
+    np.add.at(full, rows, vals[:, None].astype(np.float64) * feat[cols])
+
+    K = 600
+    acc = np.zeros((len(seeds), 4))
+    for k in range(K):
+        sb = sample_blocks(graph, seeds, [3], seed=10_000 + k)
+        blk = sb.blocks[0]
+        out = block_aggregate_ref(blk, feat[blk.src_nodes])
+        acc += out[:blk.num_dst]
+    est = acc / K
+    scale = np.abs(full[seeds]).max()
+    np.testing.assert_allclose(est, full[seeds], atol=0.08 * scale + 0.02)
+
+
+def test_exhaustive_fanout_is_exact(graph):
+    """Fanout >= max degree keeps every edge: the sampled op IS the full op
+    at the seeds (scale factors all 1)."""
+    rng = np.random.default_rng(1)
+    feat = rng.standard_normal((graph.num_nodes, 3)).astype(np.float32)
+    seeds = np.array([0, 17, 200])
+    g2, vals = gcn_edge_values(graph)
+    rows, cols = g2.to_coo()
+    full = np.zeros((graph.num_nodes, 3))
+    np.add.at(full, rows, vals[:, None].astype(np.float64) * feat[cols])
+    big = int(graph.degrees.max()) + 1
+    sb = sample_blocks(graph, seeds, [big], seed=0)
+    out = block_aggregate_ref(sb.blocks[0], feat[sb.blocks[0].src_nodes])
+    np.testing.assert_allclose(out[:len(seeds)], full[seeds],
+                               atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------- loader + bucketed jitting
+
+def _loader(graph, feat, labels, cfg, batch_nodes, **kw):
+    return SampledLoader(
+        graph, feat, labels, cfg,
+        LoaderConfig(fanouts=(4, 2), batch_nodes=batch_nodes, seed=0,
+                     tune_iters=2, **kw),
+        start_thread=False)
+
+
+def test_bucket_reuse_same_jit_and_config(graph):
+    """Two batches with different raw sizes but the same pow2 bucket must
+    reuse ONE compiled step executable and share the plan-cache config."""
+    cfg = GNNConfig(arch="gcn", in_dim=8, hidden_dim=8, num_classes=3,
+                    num_layers=2, backend="xla")
+    rng = np.random.default_rng(0)
+    feat = rng.standard_normal((graph.num_nodes, 8)).astype(np.float32)
+    labels = structural_labels(graph, 3)
+    loader = _loader(graph, feat, labels, cfg, batch_nodes=64)
+    step = SampledTrainStep(cfg, __import__(
+        "repro.optim.adamw", fromlist=["AdamWConfig"]).AdamWConfig(lr=1e-2))
+    from repro.optim.adamw import adamw_init
+    params = init_gnn_params(cfg, jax.random.PRNGKey(0))
+    state = (params, adamw_init(params))
+
+    # deterministic stream: find two batches sharing a bucket key while
+    # differing in raw (unpadded) sizes — the case bucketing exists for
+    batches = [loader.batch_for(s) for s in range(12)]
+    by_key = {}
+    pair = None
+    for b in batches:
+        other = by_key.setdefault(b.key, b)
+        if other is not b and other.raw_nodes != b.raw_nodes:
+            pair = (other, b)
+            break
+    assert pair is not None, sorted(
+        (b.key[2], b.raw_nodes) for b in batches)
+    b0, b1 = pair
+    state, m0 = step(state, b0)
+    state, m1 = step(state, b1)
+    assert step.traces == 1 and step.num_buckets == 1
+    assert np.isfinite(m0["loss"]) and np.isfinite(m1["loss"])
+    # config-level plan-cache reuse: the tuner ran once per shape class,
+    # and the same-bucket pair shares per-layer configs exactly
+    st = loader.stats()["cache"]
+    assert st["config_hits"] > 0
+    for e0, e1 in zip(b0.entries, b1.entries):
+        assert e0.plan.config == e1.plan.config
+
+
+def test_loader_deterministic_and_epoch_coverage(graph):
+    cfg = GNNConfig(arch="gcn", in_dim=4, hidden_dim=4, num_classes=3,
+                    num_layers=2, backend="xla")
+    rng = np.random.default_rng(0)
+    feat = rng.standard_normal((graph.num_nodes, 4)).astype(np.float32)
+    labels = structural_labels(graph, 3)
+    loader = _loader(graph, feat, labels, cfg, batch_nodes=100)
+    assert loader.steps_per_epoch == 4
+    a, b = loader.batch_for(2), loader.batch_for(2)
+    np.testing.assert_array_equal(a.seeds, b.seeds)
+    np.testing.assert_array_equal(a.feat, b.feat)
+    # one epoch's seed slices partition (drop_last) the node set
+    seen = np.concatenate([loader.seeds_for(s) for s in range(4)])
+    assert len(np.unique(seen)) == len(seen) == 400
+
+
+def test_prefetch_thread_and_restart_resync(graph):
+    """The background double buffer returns the same batches as the pure
+    path, including after an out-of-order (restart-style) request."""
+    cfg = GNNConfig(arch="gcn", in_dim=4, hidden_dim=4, num_classes=3,
+                    num_layers=2, backend="xla")
+    rng = np.random.default_rng(0)
+    feat = rng.standard_normal((graph.num_nodes, 4)).astype(np.float32)
+    labels = structural_labels(graph, 3)
+    with SampledLoader(
+            graph, feat, labels, cfg,
+            LoaderConfig(fanouts=(4, 2), batch_nodes=64, seed=0,
+                         tune_iters=2)) as loader:
+        want = [loader.batch_for(s).seeds for s in range(3)]
+        got = [loader(s).seeds for s in range(3)]
+        for w, g_ in zip(want, got):
+            np.testing.assert_array_equal(w, g_)
+        # restart: jump back to step 0
+        np.testing.assert_array_equal(loader(0).seeds, want[0])
+        np.testing.assert_array_equal(loader(1).seeds, want[1])
+
+
+def test_trainer_drives_sampled_loader(graph, tmp_path):
+    """End-to-end: Trainer + loader + per-bucket step — loss finite, close()
+    shuts the prefetch thread down."""
+    from repro.optim.adamw import AdamWConfig, adamw_init
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    cfg = GNNConfig(arch="gcn", in_dim=8, hidden_dim=8, num_classes=3,
+                    num_layers=2, backend="xla")
+    rng = np.random.default_rng(0)
+    feat = rng.standard_normal((graph.num_nodes, 8)).astype(np.float32)
+    labels = structural_labels(graph, 3)
+    loader = SampledLoader(
+        graph, feat, labels, cfg,
+        LoaderConfig(fanouts=(4, 2), batch_nodes=128, seed=0, tune_iters=2))
+    step = SampledTrainStep(cfg, AdamWConfig(lr=1e-2))
+    params = init_gnn_params(cfg, jax.random.PRNGKey(0))
+    trainer = Trainer(
+        TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=100, log_every=100),
+        step, loader, (params, adamw_init(params)), log_fn=lambda s: None)
+    trainer.run(4)
+    trainer.close()
+    assert loader._thread is None                  # close() joined the worker
+    assert len(trainer.metrics_history) == 4
+    assert all(np.isfinite(m["loss"]) for m in trainer.metrics_history)
+
+
+# ----------------------------------------------------- Pallas backward parity
+
+@pytest.mark.parametrize("arch", ["gcn", "gin"])
+def test_sampled_grad_pallas_matches_xla(arch, graph):
+    """Acceptance: the sampled step's gradient through the Pallas backward
+    (transposed schedules, interpret mode) matches native-XLA AD on a small
+    fixed batch."""
+    import dataclasses as dc
+
+    cfg = GNNConfig(arch=arch, in_dim=8, hidden_dim=8, num_classes=3,
+                    num_layers=2, backend="pallas_interpret")
+    rng = np.random.default_rng(2)
+    feat_full = rng.standard_normal((graph.num_nodes, 8)).astype(np.float32)
+    labels_full = structural_labels(graph, 3)
+    loader = SampledLoader(
+        graph, feat_full, labels_full, cfg,
+        LoaderConfig(fanouts=(3, 2), batch_nodes=24, seed=0, tune_iters=2),
+        start_thread=False, with_backward=True)
+    batch = loader.batch_for(0)
+    params = init_gnn_params(cfg, jax.random.PRNGKey(1))
+    feat = jnp.asarray(batch.feat)
+    labels = jnp.asarray(batch.labels)
+    mask = jnp.asarray(batch.mask)
+
+    def grads(backend, strip_bwd):
+        execs = []
+        for ent in batch.entries:
+            plan = ent.plan
+            if strip_bwd:
+                plan = dc.replace(plan, partition_bwd=None,
+                                  edge_perm_bwd=None)
+            execs.append(PlanExecutor(plan, backend=backend))
+        return jax.grad(lambda p: gnn_block_loss(
+            cfg, p, feat, labels, mask, execs)[0])(params)
+
+    gx = grads("xla", strip_bwd=True)              # native XLA autodiff
+    gp = grads("pallas_interpret", strip_bwd=False)  # transposed-sched VJP
+    for k in gx:
+        np.testing.assert_allclose(gp[k], gx[k], atol=1e-4, rtol=1e-4,
+                                   err_msg=k)
+
+
+# -------------------------------------------------- subgraph edge cases
+
+def test_k_hop_and_ego_edge_cases():
+    g = from_edges(6, np.array([0, 1, 2]), np.array([1, 2, 3]))  # node 5 isolated
+
+    np.testing.assert_array_equal(k_hop_nodes(g, [5], 2), [5])
+    ego = extract_ego(g, [5], 2)
+    assert ego.graph.num_edges == 0 and ego.nodes.tolist() == [5]
+
+    # hops=0: the seed set itself, sorted, edges among seeds retained
+    ego0 = extract_ego(g, [3, 1], 0)
+    assert ego0.nodes.tolist() == [1, 3]
+    np.testing.assert_array_equal(ego0.nodes[ego0.seed_local], [3, 1])
+
+    # duplicate seeds: no duplicated rows, one seed_local entry per request
+    ego_d = extract_ego(g, [1, 1, 3], 1)
+    assert len(np.unique(ego_d.nodes)) == len(ego_d.nodes)
+    assert len(ego_d.seed_local) == 3
+    np.testing.assert_array_equal(ego_d.nodes[ego_d.seed_local], [1, 1, 3])
+
+    # empty seeds: empty, not a crash
+    assert len(k_hop_nodes(g, np.array([], np.int64), 2)) == 0
+    assert extract_ego(g, np.array([], np.int64), 1).graph.num_nodes == 0
+
+    # deterministic (sorted) node order
+    np.testing.assert_array_equal(extract_ego(g, [3, 0], 1).nodes,
+                                  sorted(extract_ego(g, [3, 0], 1).nodes))
+
+    with pytest.raises(ValueError, match="seed ids"):
+        k_hop_nodes(g, [-1], 1)
+    with pytest.raises(ValueError, match="seed ids"):
+        extract_ego(g, [99], 1)
+    with pytest.raises(ValueError, match="hops"):
+        k_hop_nodes(g, [0], -1)
+
+
+def test_sampler_rejects_bad_inputs(graph):
+    with pytest.raises(ValueError, match="seed"):
+        sample_blocks(graph, [], [3])
+    with pytest.raises(ValueError, match="out of range"):
+        sample_blocks(graph, [graph.num_nodes], [3])
+    with pytest.raises(ValueError, match="fanout"):
+        sample_blocks(graph, [0], [])
+    with pytest.raises(ValueError, match="edge_mode"):
+        sample_blocks(graph, [0], [2], edge_mode="nope")
+
+
+def test_zero_degree_seeds_train(graph):
+    """A batch whose seeds include isolated nodes still produces a valid
+    (self-loop-only) block and a finite loss."""
+    # graft two isolated nodes onto the fixture graph
+    indptr = np.concatenate([graph.indptr,
+                             [graph.indptr[-1], graph.indptr[-1]]])
+    g2 = CSRGraph(indptr, graph.indices)
+    seeds = [g2.num_nodes - 1, g2.num_nodes - 2, 0]
+    sb = sample_blocks(g2, seeds, [3, 2], seed=0)
+    blk = sb.blocks[1]
+    degs = np.diff(blk.graph.indptr)[:blk.num_dst]
+    assert (degs >= 1).all()                       # every dst has >= self-loop
+    out = block_aggregate_ref(sb.blocks[0], np.ones((sb.blocks[0].num_src, 2),
+                                                    np.float32))
+    assert np.isfinite(out).all()
