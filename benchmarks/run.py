@@ -22,6 +22,7 @@ SECTIONS = [
     ("serving engine (smoke)", "benchmarks.bench_serve"),
     ("train step fwd+bwd (smoke)", "benchmarks.bench_train"),
     ("sampled mini-batch training (smoke)", "benchmarks.bench_sampling"),
+    ("sharded halo-exchange step (smoke)", "benchmarks.bench_shard"),
     ("roofline (§Roofline)", "benchmarks.roofline"),
 ]
 

@@ -4,11 +4,14 @@ from repro.core.aggregate import PlanExecutor
 from repro.core.extractor import extract_arch_props, extract_graph_props
 from repro.core.model import AggConfig, KernelModel, paper_eq2_latency
 from repro.core.partition import GroupPartition, partition_graph, partition_stats
+from repro.core.plan import Plan
 from repro.core.reorder import renumber
+from repro.core.shard import PlanShards, ShardSpec, shard_plan
 from repro.core.tuner import tune
 
 __all__ = [
-    "AggregationPlan", "advise", "PlanExecutor",
+    "AggregationPlan", "Plan", "advise", "PlanExecutor",
+    "PlanShards", "ShardSpec", "shard_plan",
     "extract_arch_props", "extract_graph_props",
     "AggConfig", "KernelModel", "paper_eq2_latency",
     "GroupPartition", "partition_graph", "partition_stats",

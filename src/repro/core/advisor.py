@@ -4,11 +4,11 @@
   crafter (renumbering + partition + kernel dispatch).
 
 `advise()` is the one-call entry point: given a graph + GNN architecture it
-returns an executable `AggregationPlan` with everything the runtime needs.
+returns an executable `Plan` with everything the runtime needs (the
+`repro.core.plan` IR — `AggregationPlan` is its historical alias).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import numpy as np
@@ -18,45 +18,16 @@ from repro.core.extractor import (GNNArchProps, GraphProps, extract_arch_props,
 from repro.core.model import AggConfig, KernelModel
 from repro.core.partition import (GroupPartition, partition_graph,
                                   partition_stats, transpose_graph)
+from repro.core.plan import Plan
 from repro.core.reorder import apply_renumbering, renumber
 from repro.core.tuner import TunerResult, tune
 from repro.graphs.csr import CSRGraph
 
-__all__ = ["AggregationPlan", "advise", "plan_for"]
+__all__ = ["AggregationPlan", "Plan", "advise", "plan_for"]
 
-
-@dataclasses.dataclass
-class AggregationPlan:
-    """Everything needed to run aggregation for one graph."""
-
-    graph: CSRGraph                    # possibly renumbered
-    partition: GroupPartition
-    config: AggConfig
-    graph_props: GraphProps
-    arch: GNNArchProps
-    perm: Optional[np.ndarray]         # old->new node ids (None = identity)
-    tuner: Optional[TunerResult]
-    stats: dict
-    reduce_dim_first: bool             # §4.2 aggregation placement decision
-    # training support (plan_for(with_backward=True)): the partition of the
-    # TRANSPOSED graph under the SAME config — the aggregation kernel's
-    # backward-pass schedule — plus the edge permutation mapping the
-    # transposed CSR's edge order back to the forward graph's.
-    partition_bwd: Optional[GroupPartition] = None
-    edge_perm_bwd: Optional[np.ndarray] = None
-
-    def renumber_features(self, feat: np.ndarray) -> np.ndarray:
-        if self.perm is None:
-            return feat
-        inv = np.empty_like(self.perm)
-        inv[self.perm] = np.arange(len(self.perm))
-        return feat[inv]
-
-    def restore_order(self, out):
-        """Map kernel output (new numbering) back to the original node order."""
-        if self.perm is None:
-            return out
-        return out[self.perm]
+# The plan dataclass itself now lives in `repro.core.plan` (the shared Plan
+# IR); `AggregationPlan` is the historical name for the same type.
+AggregationPlan = Plan
 
 
 def advise(g: CSRGraph, *, arch: str = "gcn", in_dim: int = 128,
@@ -127,7 +98,8 @@ def plan_for(g: CSRGraph, *, arch: str = "gcn", in_dim: int = 128,
         so `PlanExecutor` can run `jax.grad` through the Pallas backends.
         Off by default — inference-only plans skip the extra partitioning.
 
-    Returns an `AggregationPlan`; feed it to `core.aggregate.PlanExecutor`.
+    Returns a `Plan`; feed it to `core.aggregate.PlanExecutor` (or call
+    ``plan.executor(backend)``).
 
     Example
     -------
@@ -153,7 +125,7 @@ def plan_for(g: CSRGraph, *, arch: str = "gcn", in_dim: int = 128,
         part_bwd = partition_graph(gT, gs=config.gs, gpt=config.gpt,
                                    ont=config.ont, src_win=config.src_win,
                                    edge_vals=vals_t)
-    return AggregationPlan(
+    return Plan(
         graph=g, partition=part, config=config, graph_props=props,
         arch=archp, perm=None, tuner=tuner_res, stats=partition_stats(part),
         reduce_dim_first=archp.reduce_dim_first,

@@ -1,6 +1,6 @@
 """High-level aggregation API used by GNN layers.
 
-Bridges an `AggregationPlan` (advisor output) to executable JAX functions.
+Bridges a `Plan` (advisor output) to executable JAX functions.
 When the plan carries a backward partition (`plan_for(with_backward=True)`),
 every call is differentiable on every backend: the Pallas kernel's custom
 VJP re-aggregates the output cotangent over the transposed schedule (see
@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.advisor import AggregationPlan
+from repro.core.plan import Plan
 from repro.kernels.ops import DeviceSchedule, aggregate as _kernel_aggregate
 
 __all__ = ["PlanExecutor"]
@@ -21,13 +21,10 @@ __all__ = ["PlanExecutor"]
 class PlanExecutor:
     """Executable aggregation bound to one plan (device-resident schedule)."""
 
-    def __init__(self, plan: AggregationPlan, *,
-                 backend: str = "pallas_interpret"):
+    def __init__(self, plan: Plan, *, backend: str = "pallas_interpret"):
         self.plan = plan
-        self.sched = DeviceSchedule(plan.partition)
-        self.sched_bwd = (None if plan.partition_bwd is None else
-                          DeviceSchedule(plan.partition_bwd,
-                                         edge_perm=plan.edge_perm_bwd))
+        self.sched = plan.sched()
+        self.sched_bwd = plan.sched_bwd()
         self.backend = backend
         self.dt = plan.config.dt
         self.variant = plan.config.variant

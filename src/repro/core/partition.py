@@ -30,8 +30,8 @@ import numpy as np
 
 from repro.graphs.csr import CSRGraph
 
-__all__ = ["GroupPartition", "partition_graph", "partition_stats",
-           "transpose_graph"]
+__all__ = ["GroupPartition", "pad_partition_tiles", "partition_graph",
+           "partition_stats", "transpose_graph"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +74,18 @@ class GroupPartition:
     @property
     def num_groups(self) -> int:
         return int(self.nbrs.shape[0] * self.nbrs.shape[1])
+
+    def edge_values_csr(self) -> Optional[np.ndarray]:
+        """Recover per-edge values in ORIGINAL CSR edge order — the
+        inverse of the slot scatter (edge e lives at flat group
+        ``edge_slot[e]``, position ``edge_pos[e]``).  Returns None for an
+        edge-less partition.  This is how the shard splitter and the
+        sharded sampled trainer re-plan a graph under different knobs
+        without the caller having kept the value array around."""
+        if self.num_edges == 0:
+            return None
+        return self.edge_val.reshape(-1, self.gs)[self.edge_slot,
+                                                  self.edge_pos]
 
     @property
     def padded_src_rows(self) -> int:
@@ -201,6 +213,37 @@ def partition_graph(g: CSRGraph, *, gs: int = 16, gpt: int = 16, ont: int = 8,
         edge_slot=edge_slot, edge_pos=edge_pos,
         gs=gs, gpt=gpt, ont=ont, src_win=src_win,
         num_nodes=n, num_edges=e,
+    )
+
+
+def pad_partition_tiles(p: GroupPartition, target_tiles: int) -> GroupPartition:
+    """Append no-op tiles (zero edge values, last tile's block/window) until
+    ``num_tiles == target_tiles``.  edge_slot/edge_pos stay valid: original
+    flat group slots are unchanged, new slots only appended.  This is how
+    shape bucketing works everywhere schedules must share one compiled
+    executable — the serving plan cache's pow2 buckets and the shard
+    splitter's uniform per-shard tile counts (shard_map operands must have
+    identical shapes on every device)."""
+    T = p.num_tiles
+    if target_tiles <= T:
+        return p
+    pad = target_tiles - T
+    # an empty partition has no "last tile" to clone — window/block 0 tiles
+    # with zero edge values are equally inert
+    win = int(p.tile_window[-1]) if T > 0 else 0
+    blk = int(p.tile_node_block[-1]) if T > 0 else 0
+    return dataclasses.replace(
+        p,
+        nbrs=np.concatenate(
+            [p.nbrs, np.full((pad, p.gpt, p.gs), win * p.src_win, np.int32)]),
+        edge_val=np.concatenate(
+            [p.edge_val, np.zeros((pad, p.gpt, p.gs), np.float32)]),
+        local_node=np.concatenate(
+            [p.local_node, np.zeros((pad, p.gpt), np.int32)]),
+        tile_node_block=np.concatenate(
+            [p.tile_node_block, np.full(pad, blk, np.int32)]),
+        tile_window=np.concatenate(
+            [p.tile_window, np.full(pad, win, np.int32)]),
     )
 
 

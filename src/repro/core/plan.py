@@ -1,0 +1,238 @@
+"""The Plan IR — the one plan object every execution layer consumes.
+
+A `Plan` is the advisor's output and the runtime's input: the static group
+schedule (forward and, for training, the transposed backward pair), the
+tuned `AggConfig`, the renumber/restore permutations, and the extracted
+properties that justified the choices.  Before this module existed the
+same information travelled in three ad-hoc bundles (the advisor's
+`AggregationPlan`, the serving engine's private schedule view, and the
+sampled trainer's per-entry tuples); everything now flows through one
+type with one jit-argument convention and one serialization point:
+
+  * `jit_args()` / `jit_statics()` — split the plan into a pytree of
+    schedule ARRAYS (safe to pass as jit primals / `shard_map` operands;
+    they may become tracers) and a hashable tuple of static ints (the
+    compilation-cache key part).  `executor_from_args` rebuilds a working
+    `PlanExecutor` from the pair inside a traced function — this is the
+    `SchedView` arrays-as-primals convention from `repro.kernels.ops`,
+    now uniform across serving, sampling, and sharded execution.
+  * `executor(backend)` — a ready single-device `PlanExecutor`, with
+    device-resident schedules cached on the plan (repeated executors do
+    not re-upload the tile tensors).
+  * `save(path)` / `Plan.load(path)` — the single (de)serialization
+    point (npz), so a tuned plan survives process restarts and can be
+    shipped to other hosts.
+  * `shards(n)` — split into per-device sub-plans for halo-exchange
+    execution (delegates to `repro.core.shard`).
+
+`AggregationPlan` remains as a back-compat alias in `repro.core.advisor`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.extractor import GNNArchProps, GraphProps
+from repro.core.model import AggConfig
+from repro.core.partition import GroupPartition
+from repro.graphs.csr import CSRGraph
+
+__all__ = ["Plan"]
+
+_PARTITION_ARRAYS = ("nbrs", "edge_val", "local_node", "tile_node_block",
+                     "tile_window", "edge_slot", "edge_pos")
+_PARTITION_STATICS = ("gs", "gpt", "ont", "src_win", "num_nodes", "num_edges")
+
+
+@dataclasses.dataclass
+class Plan:
+    """Everything needed to run aggregation for one graph (see module doc)."""
+
+    graph: CSRGraph                    # possibly renumbered
+    partition: GroupPartition
+    config: AggConfig
+    graph_props: Optional[GraphProps]
+    arch: Optional[GNNArchProps]
+    perm: Optional[np.ndarray]         # old->new node ids (None = identity)
+    tuner: Optional[Any]
+    stats: dict
+    reduce_dim_first: bool             # §4.2 aggregation placement decision
+    # training support (plan_for(with_backward=True)): the partition of the
+    # TRANSPOSED graph under the SAME config — the aggregation kernel's
+    # backward-pass schedule — plus the edge permutation mapping the
+    # transposed CSR's edge order back to the forward graph's.
+    partition_bwd: Optional[GroupPartition] = None
+    edge_perm_bwd: Optional[np.ndarray] = None
+
+    # ---------------- node-order plumbing ----------------
+
+    def renumber_features(self, feat: np.ndarray) -> np.ndarray:
+        """Original-order node array -> the plan's (renumbered) order."""
+        if self.perm is None:
+            return feat
+        inv = np.empty_like(self.perm)
+        inv[self.perm] = np.arange(len(self.perm))
+        return feat[inv]
+
+    def restore_order(self, out):
+        """Map kernel output (new numbering) back to the original node order."""
+        if self.perm is None:
+            return out
+        return out[self.perm]
+
+    # ---------------- device schedules + executors ----------------
+
+    def sched(self):
+        """Cached device-resident forward `DeviceSchedule`."""
+        from repro.kernels.ops import DeviceSchedule
+        cached = getattr(self, "_sched_cache", None)
+        if cached is None or cached[0] is not self.partition:
+            cached = (self.partition, DeviceSchedule(self.partition))
+            self._sched_cache = cached
+        return cached[1]
+
+    def sched_bwd(self):
+        """Cached device-resident TRANSPOSED-graph schedule (None if the
+        plan was built without ``with_backward``)."""
+        if self.partition_bwd is None:
+            return None
+        from repro.kernels.ops import DeviceSchedule
+        cached = getattr(self, "_sched_bwd_cache", None)
+        if cached is None or cached[0] is not self.partition_bwd:
+            cached = (self.partition_bwd,
+                      DeviceSchedule(self.partition_bwd,
+                                     edge_perm=self.edge_perm_bwd))
+            self._sched_bwd_cache = cached
+        return cached[1]
+
+    def executor(self, backend: str = "pallas_interpret"):
+        """Single-device `PlanExecutor` bound to this plan."""
+        from repro.core.aggregate import PlanExecutor
+        return PlanExecutor(self, backend=backend)
+
+    # ---------------- the jit-argument convention ----------------
+
+    def jit_args(self, *, with_edges: bool = False) -> tuple:
+        """Schedule ARRAYS as a pytree — pass these as jit/shard_map
+        arguments (primals).  Layout: ``(fwd_arrays, bwd_arrays_or_None)``
+        where each element matches `repro.kernels.ops.sched_arrays`.
+
+        with_edges=False (default) drops the (E,)-sized ``edge_slot`` /
+        ``edge_pos`` / ``edge_perm`` members: raw edge counts are
+        unbucketed, so keeping them would force one retrace per distinct
+        edge count.  Only the dynamic edge-value path (GAT-type) needs
+        them — pass True there.
+        """
+        from repro.kernels.ops import sched_arrays
+
+        def arrs(s):
+            a = sched_arrays(s)
+            return a if with_edges else a[:5] + (None, None, None)
+
+        sb = self.sched_bwd()
+        return (arrs(self.sched()), None if sb is None else arrs(sb))
+
+    def jit_statics(self) -> tuple:
+        """Hashable static half of the convention: ``(fwd_statics,
+        bwd_statics_or_None, dt, variant)`` — the jit-cache key part.
+        Feed the (statics, args) pair to `executor_from_args`."""
+        from repro.kernels.ops import sched_statics
+        sb = self.sched_bwd()
+        return (sched_statics(self.sched()),
+                None if sb is None else sched_statics(sb),
+                self.config.dt, self.config.variant)
+
+    @staticmethod
+    def executor_from_args(statics: tuple, args: tuple, *,
+                           backend: str = "pallas_interpret"):
+        """Rebuild a working `PlanExecutor` from the (statics, args) pair
+        INSIDE a traced function — arrays may be tracers.  This is the one
+        convention shared by serving's shared forwards, the sampled
+        trainer's per-bucket steps, and the sharded per-device bodies."""
+        from repro.core.aggregate import PlanExecutor
+        from repro.kernels.ops import SchedView
+        st_f, st_b, dt, variant = statics
+        a_f, a_b = args
+        return PlanExecutor.from_schedule(
+            SchedView(a_f, st_f), dt=dt, variant=variant, backend=backend,
+            sched_bwd=None if a_b is None else SchedView(a_b, st_b))
+
+    # ---------------- sharding ----------------
+
+    def shards(self, num_shards: int):
+        """Split into `num_shards` contiguous node-range sub-plans with halo
+        metadata (`repro.core.shard.shard_plan`)."""
+        from repro.core.shard import shard_plan
+        return shard_plan(self, num_shards)
+
+    # ---------------- serialization ----------------
+
+    def save(self, path: str) -> None:
+        """Serialize to ``path`` (npz).  Stores the graph, both partitions,
+        config, permutations and arch/stat metadata — everything needed to
+        re-execute; the tuner trace and extracted props are not persisted
+        (they are advisory provenance, rebuildable from the graph)."""
+        data: dict = {
+            "graph_indptr": self.graph.indptr,
+            "graph_indices": self.graph.indices,
+            "stats_json": np.frombuffer(
+                json.dumps(self.stats).encode(), dtype=np.uint8),
+            "reduce_dim_first": np.asarray(int(self.reduce_dim_first)),
+        }
+        for k in ("gs", "gpt", "dt", "src_win", "ont"):
+            data[f"cfg_{k}"] = np.asarray(getattr(self.config, k))
+        data["cfg_variant"] = np.frombuffer(
+            self.config.variant.encode(), dtype=np.uint8)
+        if self.perm is not None:
+            data["perm"] = self.perm
+        if self.arch is not None:
+            data["arch_json"] = np.frombuffer(
+                json.dumps(dataclasses.asdict(self.arch)).encode(),
+                dtype=np.uint8)
+        for prefix, part in (("p", self.partition), ("b", self.partition_bwd)):
+            if part is None:
+                continue
+            for f in _PARTITION_ARRAYS:
+                data[f"{prefix}_{f}"] = getattr(part, f)
+            for f in _PARTITION_STATICS:
+                data[f"{prefix}_{f}"] = np.asarray(getattr(part, f))
+        if self.edge_perm_bwd is not None:
+            data["edge_perm_bwd"] = self.edge_perm_bwd
+        np.savez_compressed(path, **data)
+
+    @classmethod
+    def load(cls, path: str) -> "Plan":
+        """Inverse of `save` (tuner/props come back as None)."""
+        z = np.load(path)
+
+        def part(prefix):
+            if f"{prefix}_nbrs" not in z:
+                return None
+            return GroupPartition(
+                **{f: z[f"{prefix}_{f}"] for f in _PARTITION_ARRAYS},
+                **{f: int(z[f"{prefix}_{f}"]) for f in _PARTITION_STATICS})
+
+        arch = None
+        if "arch_json" in z:
+            arch = GNNArchProps(**json.loads(bytes(z["arch_json"]).decode()))
+        p = part("p")
+        return cls(
+            graph=CSRGraph(z["graph_indptr"], z["graph_indices"]),
+            partition=p,
+            config=AggConfig(
+                gs=int(z["cfg_gs"]), gpt=int(z["cfg_gpt"]),
+                dt=int(z["cfg_dt"]), src_win=int(z["cfg_src_win"]),
+                ont=int(z["cfg_ont"]),
+                variant=bytes(z["cfg_variant"]).decode()),
+            graph_props=None, arch=arch,
+            perm=z["perm"] if "perm" in z else None,
+            tuner=None,
+            stats=json.loads(bytes(z["stats_json"]).decode()),
+            reduce_dim_first=bool(int(z["reduce_dim_first"])),
+            partition_bwd=part("b"),
+            edge_perm_bwd=(z["edge_perm_bwd"] if "edge_perm_bwd" in z
+                           else None),
+        )

@@ -1,0 +1,195 @@
+"""Shardable plans: split one `Plan` into per-device sub-plans (NeuGraph-
+style partition-based dataflow, adapted to the static group schedule).
+
+A graph is split into ``P`` CONTIGUOUS node-range shards: shard ``p`` owns
+output rows ``[p*n_local, (p+1)*n_local)``.  Contiguity is deliberate —
+after RABBIT/community renumbering (§6.1) consecutive ids are neighbors,
+so contiguous ranges are dense sub-communities and the halo (the set of
+remote source nodes a shard reads) stays small.  Each shard gets a full
+sub-`Plan`: its rows' adjacency partitioned under the parent's tuned
+`AggConfig`, with GLOBAL source ids (the kernel gathers from the
+all-gathered feature matrix) and, for training, the transposed backward
+pair.  All shards are padded to one tile count so their schedule tensors
+stack into uniform `shard_map` operands.
+
+The device-side execution (mesh construction, all-gather halo exchange,
+sharded train step) lives in `repro.distributed.graph_shard`; this module
+is pure host-side numpy, like the rest of the planning stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.partition import (GroupPartition, pad_partition_tiles,
+                                  partition_graph, transpose_graph)
+from repro.core.plan import Plan
+from repro.graphs.csr import CSRGraph
+
+__all__ = ["PlanShards", "ShardSpec", "halo_sources", "shard_graph",
+           "shard_plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Geometry of a contiguous node-range split."""
+
+    num_shards: int
+    num_nodes: int        # real node count of the parent graph
+    n_local: int          # uniform rows per shard (padded_nodes / num_shards)
+
+    @property
+    def padded_nodes(self) -> int:
+        return self.num_shards * self.n_local
+
+
+def shard_ranges(num_nodes: int, num_shards: int) -> ShardSpec:
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    n_local = -(-num_nodes // num_shards)
+    return ShardSpec(num_shards=num_shards, num_nodes=num_nodes,
+                     n_local=n_local)
+
+
+def halo_sources(g: CSRGraph, spec: ShardSpec) -> list[np.ndarray]:
+    """Per-shard halo: the sorted REMOTE source ids shard p's rows read
+    (NeuGraph's replicated "halo" vertices).  The executor currently
+    exchanges features by all-gather, so the halo is advisory — it is the
+    lower bound a selective (send-only-what's-read) exchange would move,
+    reported in `PlanShards.stats()` so reorder quality is observable."""
+    out = []
+    for p in range(spec.num_shards):
+        lo, hi = p * spec.n_local, (p + 1) * spec.n_local
+        e_lo, e_hi = (g.indptr[min(lo, g.num_nodes)],
+                      g.indptr[min(hi, g.num_nodes)])
+        srcs = np.unique(g.indices[e_lo:e_hi])
+        out.append(srcs[(srcs < lo) | (srcs >= hi)].astype(np.int64))
+    return out
+
+
+def shard_graph(g: CSRGraph, spec: ShardSpec,
+                edge_vals: Optional[np.ndarray] = None):
+    """Split ``g`` into per-shard sub-CSRs.
+
+    Each sub-graph is SQUARE over ``spec.padded_nodes`` nodes: rows
+    ``[0, n_local)`` hold shard p's adjacency (dst relabelled to local ids,
+    source ids kept GLOBAL), every other row is empty.  That square-over-N
+    shape is exactly the bipartite-block convention the sampled trainer
+    already uses — the kernel's feature operand is the full (gathered)
+    matrix, its output is sliced to the local rows, and unvisited output
+    blocks are masked by `kernels.ops._aggregate_impl`.
+
+    Returns ``(subs, sub_vals, edge_ranges)`` where ``edge_ranges[p] =
+    (e_lo, e_hi)`` is shard p's contiguous slice of the parent's CSR edge
+    array (dynamic per-edge values shard by slicing with it).
+    """
+    n, n_pad = g.num_nodes, spec.padded_nodes
+    subs, sub_vals, edge_ranges = [], [], []
+    for p in range(spec.num_shards):
+        lo, hi = p * spec.n_local, min((p + 1) * spec.n_local, n)
+        lo = min(lo, n)
+        e_lo, e_hi = int(g.indptr[lo]), int(g.indptr[hi])
+        indptr = np.full(n_pad + 1, e_hi - e_lo, dtype=np.int64)
+        indptr[: hi - lo + 1] = g.indptr[lo:hi + 1] - e_lo
+        indptr[0] = 0
+        subs.append(CSRGraph(indptr, g.indices[e_lo:e_hi].copy()))
+        sub_vals.append(None if edge_vals is None
+                        else np.asarray(edge_vals,
+                                        dtype=np.float32)[e_lo:e_hi])
+        edge_ranges.append((e_lo, e_hi))
+    return subs, sub_vals, edge_ranges
+
+
+@dataclasses.dataclass
+class PlanShards:
+    """A `Plan` split for P-way halo-exchange execution.
+
+    ``plans[p]`` is shard p's sub-`Plan` (same `AggConfig`, uniform tile
+    count and statics across shards, backward pair iff the parent carried
+    one).  ``halo[p]`` is the remote source set (see `halo_sources`).
+    ``edge_ranges[p]`` slices dynamic per-edge values out of the parent's
+    CSR edge order.  The parent's renumber perm stays on ``parent`` — data
+    enters/leaves in the parent plan's node order.
+    """
+
+    parent: Plan
+    spec: ShardSpec
+    plans: list
+    halo: list
+    edge_ranges: list
+
+    @property
+    def num_shards(self) -> int:
+        return self.spec.num_shards
+
+    def stats(self) -> dict:
+        """Shard balance + halo metrics (the multi-device analogue of
+        `partition_stats`): edge balance drives per-device work, halo
+        fraction drives exchange traffic a selective transport would move."""
+        edges = np.array([p.partition.num_edges for p in self.plans])
+        halo = np.array([len(h) for h in self.halo])
+        local_src = np.array(
+            [max(len(np.unique(p.graph.indices)), 1) for p in self.plans])
+        return {
+            "num_shards": self.spec.num_shards,
+            "n_local": self.spec.n_local,
+            "edges_per_shard": edges.tolist(),
+            "edge_balance": float(edges.max() / max(edges.mean(), 1e-9)),
+            "halo_per_shard": halo.tolist(),
+            "halo_frac": (halo / local_src).tolist(),
+            "tiles_per_shard": int(self.plans[0].partition.num_tiles),
+        }
+
+
+def shard_plan(plan: Plan, num_shards: int, *,
+               with_backward: Optional[bool] = None) -> PlanShards:
+    """Split ``plan`` into ``num_shards`` contiguous node-range sub-plans.
+
+    Every shard is partitioned under the parent's tuned config, then padded
+    to the max tile count across shards (forward and backward separately)
+    so the schedule tensors stack into `shard_map` operands.  Static per-
+    edge values travel from the parent's schedule (recovered to CSR edge
+    order via ``edge_slot``/``edge_pos``); ``with_backward`` defaults to
+    whether the parent carried a backward pair.
+    """
+    g, cfg = plan.graph, plan.config
+    if with_backward is None:
+        with_backward = plan.partition_bwd is not None
+    spec = shard_ranges(g.num_nodes, num_shards)
+    edge_vals = plan.partition.edge_values_csr()
+    # all-ones is the partitioner's own default; keep None for fidelity
+    if edge_vals is not None and np.all(edge_vals == 1.0):
+        edge_vals = None
+    subs, sub_vals, edge_ranges = shard_graph(g, spec, edge_vals)
+
+    parts, parts_bwd, edge_perms = [], [], []
+    for sub, vals in zip(subs, sub_vals):
+        parts.append(partition_graph(sub, gs=cfg.gs, gpt=cfg.gpt, ont=cfg.ont,
+                                     src_win=cfg.src_win, edge_vals=vals))
+        if with_backward:
+            gT, vals_t, eperm = transpose_graph(sub, vals)
+            parts_bwd.append(partition_graph(
+                gT, gs=cfg.gs, gpt=cfg.gpt, ont=cfg.ont,
+                src_win=cfg.src_win, edge_vals=vals_t))
+            edge_perms.append(eperm)
+        else:
+            parts_bwd.append(None)
+            edge_perms.append(None)
+
+    t_fwd = max(p.num_tiles for p in parts)
+    parts = [pad_partition_tiles(p, t_fwd) for p in parts]
+    if with_backward:
+        t_bwd = max(p.num_tiles for p in parts_bwd)
+        parts_bwd = [pad_partition_tiles(p, t_bwd) for p in parts_bwd]
+
+    plans = [
+        Plan(graph=sub, partition=pf, config=cfg, graph_props=None,
+             arch=plan.arch, perm=None, tuner=None, stats={},
+             reduce_dim_first=plan.reduce_dim_first,
+             partition_bwd=pb, edge_perm_bwd=ep)
+        for sub, pf, pb, ep in zip(subs, parts, parts_bwd, edge_perms)
+    ]
+    return PlanShards(parent=plan, spec=spec, plans=plans,
+                      halo=halo_sources(g, spec), edge_ranges=edge_ranges)

@@ -43,7 +43,7 @@ class TunerResult:
     best: AggConfig
     best_score: float
     history: list  # (iteration, best_score)
-    evaluations: int
+    evaluations: int  # UNIQUE score-fn evaluations (duplicates are memoized)
 
 
 def _random_config(rng: np.random.Generator) -> AggConfig:
@@ -74,18 +74,29 @@ def _mutate(c: AggConfig, rng: np.random.Generator, p: float = 0.25) -> AggConfi
 
 def evolve(score_fn: Callable[[AggConfig], float], *, pop: int = 16,
            iters: int = 12, elite: int = 4, seed: int = 0) -> TunerResult:
-    """Generic evolutionary loop (lower score = better)."""
+    """Generic evolutionary loop (lower score = better).
+
+    Duplicate configs are never re-scored: crossover of a small elite
+    re-produces identical `AggConfig`s constantly, and profile-mode score
+    functions build REAL partitions per call — a seen-map turns those
+    repeats into dict hits.  ``TunerResult.evaluations`` therefore counts
+    UNIQUE score-function evaluations (the tuner's true cost)."""
     rng = np.random.default_rng(seed)
     population = []
     while len(population) < pop:
         c = _random_config(rng)
         if config_is_feasible(c):
             population.append(c)
-    evals = 0
+    seen: dict[AggConfig, float] = {}
+
+    def score(c: AggConfig) -> float:
+        s = seen.get(c)
+        if s is None:
+            s = seen[c] = score_fn(c)
+        return s
+
     history = []
-    scored = []
-    for c in population:
-        scored.append((score_fn(c), c)); evals += 1
+    scored = [(score(c), c) for c in population]
     for it in range(iters):
         scored.sort(key=lambda x: x[0])
         history.append((it, scored[0][0]))
@@ -96,12 +107,11 @@ def evolve(score_fn: Callable[[AggConfig], float], *, pop: int = 16,
             child = _mutate(_crossover(keep[a], keep[b], rng), rng)
             if config_is_feasible(child):
                 children.append(child)
-        scored = scored[:elite] + [(score_fn(c), c) for c in children]
-        evals += len(children)
+        scored = scored[:elite] + [(score(c), c) for c in children]
     scored.sort(key=lambda x: x[0])
     history.append((iters, scored[0][0]))
     return TunerResult(best=scored[0][1], best_score=scored[0][0],
-                       history=history, evaluations=evals)
+                       history=history, evaluations=len(seen))
 
 
 def community_profile(community_sizes: Sequence[int], dim: int, *,

@@ -1,11 +1,18 @@
-"""Distribution substrate: sharding rules application, microbatch accumulation."""
+"""Distribution substrate: sharding rules application, microbatch
+accumulation, and multi-device halo-exchange graph execution."""
 from repro.distributed.accumulate import accumulate_gradients, split_batch
+from repro.distributed.graph_shard import (SHARD_AXIS, ShardedExecutor,
+                                           make_sharded_logits_fn,
+                                           make_sharded_train_step,
+                                           shard_mesh)
 from repro.distributed.sharding import (batch_axes_for, batch_spec, constrain,
                                         named_shardings, prune_specs_for_mesh,
                                         replicated, valid_spec)
 
 __all__ = [
     "accumulate_gradients", "split_batch",
+    "SHARD_AXIS", "ShardedExecutor", "make_sharded_logits_fn",
+    "make_sharded_train_step", "shard_mesh",
     "batch_axes_for", "batch_spec", "constrain", "named_shardings",
     "prune_specs_for_mesh", "replicated", "valid_spec",
 ]

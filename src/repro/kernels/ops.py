@@ -51,7 +51,7 @@ if TYPE_CHECKING:                      # avoid core<->kernels import cycle
     from repro.core.partition import GroupPartition
 
 __all__ = ["aggregate", "DeviceSchedule", "schedule_to_device",
-           "SchedView", "sched_arrays", "sched_statics"]
+           "SchedView", "sched_arrays", "sched_statics", "sched_statics_for"]
 
 Backend = Literal["pallas", "pallas_interpret", "xla"]
 
@@ -96,11 +96,15 @@ def schedule_to_device(p: "GroupPartition") -> DeviceSchedule:
 # --- schedule (arrays, statics) split -------------------------------------
 #
 # The custom VJP below must work when the schedule tensors are jit ARGUMENTS
-# (tracers), not closure constants: the sampled mini-batch trainer compiles
-# ONE step executable per shape bucket and feeds each batch's schedules in as
-# data.  `jax.custom_vjp` forbids tracers in nondiff_argnums, so a schedule
-# is split into a pytree of arrays (traced) and a hashable tuple of static
-# ints (nondiff) and rebuilt inside via `SchedView`.
+# (tracers), not closure constants: serving's shared forwards, the sampled
+# trainer's per-bucket steps, and the sharded per-device bodies all compile
+# ONE executable per shape bucket and feed each schedule in as data.
+# `jax.custom_vjp` forbids tracers in nondiff_argnums, so a schedule is
+# split into a pytree of arrays (traced) and a hashable tuple of static
+# ints (nondiff) and rebuilt inside via `SchedView`.  The Plan IR wraps
+# this split as its one jit-argument convention — prefer
+# `repro.core.plan.Plan.jit_args()/jit_statics()/executor_from_args` at
+# call sites over using these helpers directly.
 
 _SCHED_ARRAY_FIELDS = ("nbrs", "edge_val", "local_node", "tile_node_block",
                        "tile_window", "edge_slot", "edge_pos", "edge_perm")
@@ -119,6 +123,21 @@ def sched_arrays(s) -> tuple:
 def sched_statics(s) -> tuple:
     """The schedule's static ints as a hashable tuple."""
     return tuple(int(getattr(s, f)) for f in _SCHED_STATIC_FIELDS)
+
+
+def sched_statics_for(*, gs: int, gpt: int, ont: int, src_win: int,
+                      num_nodes: int) -> tuple:
+    """A `sched_statics` tuple from bare knobs + a node count.
+
+    For callers that OVERRIDE a schedule's node geometry (the sharded
+    sampled trainer uniformizes per-layer node buckets across devices)
+    without having a schedule object carrying the new count.  Keeping the
+    constructor here pins the field order and the padded-rows math to
+    `_SCHED_STATIC_FIELDS`' single point of truth.
+    """
+    return (gs, gpt, ont, src_win, num_nodes,
+            -(-num_nodes // src_win) * src_win,     # padded_src_rows
+            -(-num_nodes // ont) * ont)             # padded_out_rows
 
 
 class SchedView:

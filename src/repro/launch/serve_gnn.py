@@ -50,6 +50,8 @@ def main(argv=None) -> int:
                    choices=["union", "disjoint"])
     p.add_argument("--zipf", type=float, default=1.1)
     p.add_argument("--tune-iters", type=int, default=4)
+    p.add_argument("--max-plans", type=int, default=64,
+                   help="plan-cache LRU bound (0 = unbounded)")
     p.add_argument("--no-bucket", dest="bucket", action="store_false",
                    default=True, help="disable shape bucketing")
     p.add_argument("--verify", type=int, default=8,
@@ -79,7 +81,9 @@ def main(argv=None) -> int:
         serving=ServingConfig(hops=args.hops, max_batch=args.batch_window,
                               batch_mode=args.batch_mode,
                               bucket_shapes=args.bucket,
-                              tune_iters=args.tune_iters))
+                              tune_iters=args.tune_iters,
+                              max_plans=(None if args.max_plans == 0
+                                         else args.max_plans)))
     print(f"[serve_gnn] graph n={g.num_nodes} e={g.num_edges} arch={args.arch} "
           f"backend={args.backend} hops={engine.hops} "
           f"(setup {time.time() - t0:.1f}s)")
@@ -97,7 +101,8 @@ def main(argv=None) -> int:
     print(f"[serve_gnn] plan-cache: exact={c['exact_hits']} "
           f"config={c['config_hits']} miss={c['misses']} "
           f"hit-rate={c['hit_rate']:.2f} "
-          f"(plans={c['plans']} configs={c['configs']})")
+          f"(plans={c['plans']} configs={c['configs']} "
+          f"evictions={c['evictions']})")
 
     ok = True
     if args.verify > 0:

@@ -23,6 +23,16 @@ graph — full-size Type III graphs train where full-batch cannot:
         --dataset reddit --scale 1.0 --fanouts 10,5 --batch-nodes 512 \
         --steps 30
 
+``--shards N`` runs multi-device halo-exchange execution over N graph
+shards (docs/distributed.md): full-graph training splits the plan into
+contiguous node-range sub-plans via the shard splitter, ``--sampled``
+training goes data-parallel (N loader batches per step, psum'd grads).
+On CPU force the devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m repro.launch.train --arch gcn \
+        --dataset cora --steps 20 --shards 4
+
 On a real cluster the same driver runs the full config under
 make_production_mesh() with per-host data sharding.
 """
@@ -36,6 +46,22 @@ import time
 GNN_ARCHS = ("gcn", "gin", "gat")
 
 
+class _ShardedBatches:
+    """step -> list of `num_shards` loader batches (one per device), and a
+    ``close()`` the Trainer forwards to the underlying loader."""
+
+    def __init__(self, loader, num_shards: int):
+        self.loader = loader
+        self.num_shards = num_shards
+
+    def __call__(self, step: int):
+        return [self.loader(step * self.num_shards + p)
+                for p in range(self.num_shards)]
+
+    def close(self):
+        self.loader.close()
+
+
 def _main_gnn_sampled(args) -> int:
     """Neighbor-sampled mini-batch branch: fanout sampler -> per-block plan
     cache -> per-bucket jitted step -> fault-tolerant Trainer loop."""
@@ -47,7 +73,8 @@ def _main_gnn_sampled(args) -> int:
     from repro.optim.adamw import AdamWConfig, adamw_init, cosine_schedule
     from repro.runtime.trainer import (FailureInjector, Trainer,
                                        TrainerConfig)
-    from repro.sampling import LoaderConfig, SampledLoader, SampledTrainStep
+    from repro.sampling import (LoaderConfig, SampledLoader,
+                                SampledTrainStep, ShardedSampledTrainStep)
 
     t0 = time.time()
     g, spec, feat = make_dataset(args.dataset, scale=args.scale,
@@ -71,16 +98,23 @@ def _main_gnn_sampled(args) -> int:
                      seed=args.seed, tune_iters=4))
     opt = AdamWConfig(lr=args.lr,
                       schedule=cosine_schedule(args.warmup, args.steps))
-    step_fn = SampledTrainStep(cfg, opt)
+    if args.shards > 1:
+        # data-parallel sampled training: every optimizer step consumes
+        # `shards` loader batches, grads psum over the shard mesh axis
+        step_fn = ShardedSampledTrainStep(cfg, opt, args.shards)
+        batch_fn = _ShardedBatches(loader, args.shards)
+    else:
+        step_fn = SampledTrainStep(cfg, opt)
+        batch_fn = loader
     params = init_gnn_params(cfg, jax.random.PRNGKey(args.seed))
     ckpt_dir = args.ckpt_dir or os.path.join(
         "/tmp", f"repro_train_sampled_{args.arch}_{args.dataset}"
                 f"_s{args.scale}_h{args.hidden_dim}_b{args.batch_nodes}"
-                f"_{args.backend}_{args.seed}")
+                f"_p{args.shards}_{args.backend}_{args.seed}")
     trainer = Trainer(
         TrainerConfig(ckpt_dir=ckpt_dir, ckpt_every=args.ckpt_every,
                       log_every=10),
-        step_fn, loader, (params, adamw_init(params)),
+        step_fn, batch_fn, (params, adamw_init(params)),
         injector=FailureInjector(args.fail_at or ()))
     t1 = time.time()
     try:
@@ -92,7 +126,8 @@ def _main_gnn_sampled(args) -> int:
               f"last_loss={hist[-1]['loss']:.4f} " if hist else "")
     cache = loader.stats()["cache"]
     print(f"[train] arch={args.arch} backend={args.backend} sampled "
-          f"fanouts={fanouts} batch={args.batch_nodes} steps={len(hist)} "
+          f"fanouts={fanouts} batch={args.batch_nodes} "
+          f"shards={args.shards} steps={len(hist)} "
           f"{losses}avg_step={trainer.avg_step_time()*1e3:.1f}ms "
           f"jit_buckets={step_fn.num_buckets} traces={step_fn.traces} "
           f"cache_hit_rate={cache['hit_rate']:.2f} "
@@ -125,18 +160,33 @@ def _main_gnn(args) -> int:
     # learnable planted task: labels from a frozen random teacher
     labels = planted_labels(g, cfg, feat, seed=args.seed + 7)
 
-    model = build_gnn(g, cfg, reorder="auto", tune_iters=6, seed=args.seed)
+    # --shards forces the transposed backward pair (the sharded step's
+    # custom VJP runs the kernel over per-shard transposed schedules) and
+    # skips the single-device executor the sharded step never runs
+    model = build_gnn(g, cfg, reorder="auto", tune_iters=6, seed=args.seed,
+                      with_backward=True if args.shards > 1 else None,
+                      with_executor=args.shards == 1)
     batch = {"feat": jnp.asarray(model.plan.renumber_features(feat)),
              "labels": jnp.asarray(model.plan.renumber_features(labels))}
 
     opt = AdamWConfig(lr=args.lr,
                       schedule=cosine_schedule(args.warmup, args.steps))
-    step_fn = make_gnn_train_step(model, opt)
+    if args.shards > 1:
+        from repro.distributed.graph_shard import make_sharded_train_step
+        shards = model.plan.shards(args.shards)
+        st = shards.stats()
+        print(f"[train] shards={args.shards} n_local={st['n_local']} "
+              f"edges/shard={st['edges_per_shard']} "
+              f"halo={st['halo_per_shard']} "
+              f"edge_balance={st['edge_balance']:.2f}")
+        step_fn = make_sharded_train_step(cfg, shards, opt)
+    else:
+        step_fn = make_gnn_train_step(model, opt)
     # unlike the LM branch, arch+seed does not determine parameter shapes —
     # key the auto-restore dir on everything that does
     ckpt_dir = args.ckpt_dir or os.path.join(
         "/tmp", f"repro_train_{args.arch}_{args.dataset}_h{args.hidden_dim}"
-                f"_{args.backend}_{args.seed}")
+                f"_p{args.shards}_{args.backend}_{args.seed}")
     trainer = Trainer(
         TrainerConfig(ckpt_dir=ckpt_dir, ckpt_every=args.ckpt_every,
                       log_every=10),
@@ -149,8 +199,8 @@ def _main_gnn(args) -> int:
     losses = (f"first_loss={hist[0]['loss']:.4f} "
               f"last_loss={hist[-1]['loss']:.4f} " if hist else "")
     print(f"[train] arch={args.arch} backend={args.backend} "
-          f"dataset={args.dataset} steps={len(hist)} {losses}"
-          f"avg_step={trainer.avg_step_time()*1e3:.1f}ms "
+          f"dataset={args.dataset} shards={args.shards} steps={len(hist)} "
+          f"{losses}avg_step={trainer.avg_step_time()*1e3:.1f}ms "
           f"wall={time.time()-t0:.1f}s")
     return 0
 
@@ -169,6 +219,11 @@ def main(argv=None) -> int:
     p.add_argument("--sampled", action="store_true",
                    help="neighbor-sampled mini-batch training (GNN archs; "
                         "docs/sampling.md)")
+    p.add_argument("--shards", type=int, default=1,
+                   help="data-parallel graph shards (GNN archs; needs that "
+                        "many jax devices — on CPU set XLA_FLAGS="
+                        "--xla_force_host_platform_device_count; "
+                        "docs/distributed.md)")
     p.add_argument("--fanouts", default="10,5",
                    help="comma-separated per-layer fanouts (with --sampled)")
     p.add_argument("--batch-nodes", type=int, default=512,
@@ -193,6 +248,10 @@ def main(argv=None) -> int:
 
     if args.sampled and args.arch not in ("gcn", "gin"):
         p.error("--sampled supports gcn/gin only")
+    if args.shards < 1:
+        p.error("--shards must be >= 1")
+    if args.shards > 1 and args.arch not in ("gcn", "gin"):
+        p.error("--shards supports gcn/gin only")
     if args.arch in GNN_ARCHS:
         return _main_gnn_sampled(args) if args.sampled else _main_gnn(args)
 

@@ -27,15 +27,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.advisor import AggregationPlan, advise
+from repro.core.advisor import advise
 from repro.core.aggregate import PlanExecutor
+from repro.core.plan import Plan
 from repro.graphs.csr import CSRGraph
 
 Pytree = Any
 
 __all__ = ["GNNConfig", "gcn_edge_values", "build_gnn", "init_gnn_params",
            "GNNModel", "make_gnn_train_step", "planted_labels",
-           "gnn_block_logits", "gnn_block_loss", "structural_labels"]
+           "gnn_block_logits", "gnn_block_loss", "gnn_sharded_logits",
+           "structural_labels"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,7 +65,7 @@ def gcn_edge_values(g: CSRGraph) -> tuple[CSRGraph, np.ndarray]:
 @dataclasses.dataclass
 class GNNModel:
     cfg: GNNConfig
-    plan: AggregationPlan
+    plan: Plan
     executor: PlanExecutor
     params: Pytree
 
@@ -113,7 +115,7 @@ class GNNModel:
                                (jnp.asarray(rows), jnp.asarray(cols)))
         return self._edges_cache
 
-    def rebind(self, plan: AggregationPlan, *,
+    def rebind(self, plan: Plan, *,
                backend: Optional[str] = None) -> "GNNModel":
         """Same weights, different graph: run this model on another plan
         (the serving path — a prebuilt model applied to a batched
@@ -184,6 +186,42 @@ def gnn_block_loss(cfg: GNNConfig, params: Pytree, feat: jax.Array,
                         labels, mask)
 
 
+def gnn_sharded_logits(cfg: GNNConfig, params: Pytree, feat_local: jax.Array,
+                       executor, *, axis: str = "shard") -> jax.Array:
+    """Per-device body of the sharded full-graph forward (run it inside
+    `shard_map` — `repro.distributed.graph_shard` builds the wrapper).
+
+    ``feat_local`` is this shard's (n_local, in_dim) row slice of the
+    parent plan's node order; ``executor`` aggregates the shard's OUTPUT
+    rows from the full gathered feature matrix (a sub-`Plan` executor from
+    `core.shard.shard_plan` — schedule num_nodes == padded global N, local
+    rows leading).  Each layer all-gathers the current activations over
+    ``axis`` (the halo exchange — its transpose is the psum-scatter that
+    returns cotangents to their owner shards), aggregates locally, and
+    slices back to the local range.  Returns (n_local, num_classes).
+    """
+    if cfg.arch not in ("gcn", "gin"):
+        raise NotImplementedError(
+            f"sharded forward supports gcn/gin, not {cfg.arch!r}")
+    n_local = feat_local.shape[0]
+    x = feat_local
+    for i in range(cfg.num_layers):
+        w = params[f"w{i}"]
+        if cfg.arch == "gcn":
+            z = x.astype(jnp.float32) @ w
+            z_full = jax.lax.all_gather(z, axis, axis=0, tiled=True)
+            x = executor(z_full)[:n_local]
+            if i < cfg.num_layers - 1:
+                x = jax.nn.relu(x)
+        else:
+            x_full = jax.lax.all_gather(x.astype(jnp.float32), axis,
+                                        axis=0, tiled=True)
+            agg = executor(x_full)[:n_local]
+            h = (1.0 + cfg.gin_eps) * x.astype(jnp.float32) + agg
+            x = jax.nn.relu(h @ w) @ params[f"w{i}b"]
+    return x
+
+
 def structural_labels(g: CSRGraph, num_classes: int) -> np.ndarray:
     """Degree-quantile node labels — a deterministic, aggregation-learnable
     task that needs NO full-graph teacher forward (the `planted_labels`
@@ -197,7 +235,8 @@ def structural_labels(g: CSRGraph, num_classes: int) -> np.ndarray:
 def build_gnn(g: CSRGraph, cfg: GNNConfig, *, key: Optional[jax.Array] = None,
               reorder: str = "auto", tune_iters: int = 6,
               config=None, seed: int = 0,
-              with_backward: Optional[bool] = None) -> GNNModel:
+              with_backward: Optional[bool] = None,
+              with_executor: bool = True) -> GNNModel:
     """Run the advisor on the graph, build the plan executor + parameters.
 
     with_backward: attach the transposed-schedule backward partition so
@@ -205,6 +244,12 @@ def build_gnn(g: CSRGraph, cfg: GNNConfig, *, key: Optional[jax.Array] = None,
     exactly when the backend is a Pallas one — XLA differentiates natively,
     and inference-only Pallas use can pass False to skip the extra
     partitioning pass.
+
+    with_executor=False skips instantiating the single-device executor
+    (which uploads the full device-resident schedule): callers that only
+    want the plan + params — sharded training re-plans per shard — avoid
+    pinning a never-executed full-graph schedule on device 0.  The
+    returned model's ``executor`` is None; don't call its ``logits``.
     """
     key = key if key is not None else jax.random.PRNGKey(seed)
     if with_backward is None:
@@ -220,7 +265,8 @@ def build_gnn(g: CSRGraph, cfg: GNNConfig, *, key: Optional[jax.Array] = None,
                       hidden_dim=cfg.hidden_dim, num_layers=cfg.num_layers,
                       reorder=reorder, tune_iters=tune_iters, config=config,
                       seed=seed, with_backward=with_backward)
-    executor = PlanExecutor(plan, backend=cfg.backend)
+    executor = (PlanExecutor(plan, backend=cfg.backend) if with_executor
+                else None)
     params = init_gnn_params(cfg, key)
     return GNNModel(cfg=cfg, plan=plan, executor=executor, params=params)
 

@@ -6,7 +6,8 @@ prefetch thread and compiles one train-step executable per shape bucket.
 See docs/sampling.md.
 """
 from repro.sampling.loader import (LoaderConfig, SampledLoader,
-                                   SampledTrainStep, TrainBatch)
+                                   SampledTrainStep, ShardedSampledTrainStep,
+                                   TrainBatch)
 from repro.sampling.neighbor import (Block, SampledBatch, block_aggregate_ref,
                                      sample_blocks, sample_frontier)
 
@@ -20,4 +21,5 @@ __all__ = [
     "TrainBatch",
     "SampledLoader",
     "SampledTrainStep",
+    "ShardedSampledTrainStep",
 ]

@@ -39,7 +39,7 @@ from repro.sampling.neighbor import SampledBatch, sample_blocks
 from repro.serving.plan_cache import PlanCache, bucket_pow2
 
 __all__ = ["LoaderConfig", "TrainBatch", "SampledLoader", "SampledTrainStep",
-           "sampled_agg_config"]
+           "ShardedSampledTrainStep", "sampled_agg_config"]
 
 
 def sampled_agg_config(g: CSRGraph):
@@ -306,51 +306,213 @@ class SampledTrainStep:
 
     @staticmethod
     def _block_args(batch: TrainBatch) -> tuple:
-        from repro.kernels.ops import sched_arrays
-
-        def arrs(sched):
-            # strip edge_slot/edge_pos/edge_perm: they are (E,) in the RAW
-            # edge count (unbucketed — would retrace every batch) and only
-            # the dynamic-edge-value path reads them, which the sampled
-            # trainer never takes (static GCN/GIN edge values).
-            return sched_arrays(sched)[:5] + (None, None, None)
-
-        out = []
-        for ent in batch.entries:
-            ex = ent.executor
-            out.append((arrs(ex.sched),
-                        None if ex.sched_bwd is None else arrs(ex.sched_bwd)))
-        return tuple(out)
+        # Plan.jit_args drops the (E,)-sized edge members by default: they
+        # are unbucketed (would retrace every batch) and only the dynamic
+        # edge-value path reads them, which the sampled trainer never
+        # takes (static GCN/GIN edge values).
+        return tuple(ent.plan.jit_args() for ent in batch.entries)
 
     def _build(self, batch: TrainBatch):
         import jax
 
-        from repro.core.aggregate import PlanExecutor
-        from repro.kernels.ops import SchedView, sched_statics
+        from repro.core.plan import Plan
         from repro.optim.adamw import adamw_update
 
         cfg, opt = self.cfg, self.opt
-        statics = []
-        for ent in batch.entries:
-            ex = ent.executor
-            acfg = ent.plan.config
-            statics.append((sched_statics(ex.sched),
-                            None if ex.sched_bwd is None
-                            else sched_statics(ex.sched_bwd),
-                            acfg.dt, acfg.variant))
+        statics = [ent.plan.jit_statics() for ent in batch.entries]
 
         def step(state, feat, labels, mask, blocks):
             self.traces += 1                       # trace-time side effect
-            execs = []
-            for (st_f, st_b, dt, variant), (a_f, a_b) in zip(statics, blocks):
-                execs.append(PlanExecutor.from_schedule(
-                    SchedView(a_f, st_f), dt=dt, variant=variant,
-                    backend=cfg.backend,
-                    sched_bwd=None if a_b is None else SchedView(a_b, st_b)))
+            execs = [Plan.executor_from_args(st, args, backend=cfg.backend)
+                     for st, args in zip(statics, blocks)]
             params, opt_state = state
             (loss, metrics), grads = jax.value_and_grad(
                 lambda p: gnn_block_loss(cfg, p, feat, labels, mask, execs),
                 has_aux=True)(params)
+            params, opt_state, om = adamw_update(opt, grads, opt_state,
+                                                 params)
+            return (params, opt_state), {**metrics, **om}
+
+        return jax.jit(step) if self.jit else step
+
+
+class ShardedSampledTrainStep:
+    """Data-parallel sampled training over the ``"shard"`` mesh axis.
+
+    ``step_fn(state, batches)`` consumes ``num_shards`` loader batches per
+    optimizer step (drive it with ``batch_fn = lambda s: [loader(s *
+    num_shards + p) for p in range(num_shards)]`` — the loader's
+    determinism and prefetch buffer handle the interleaving).  Per-layer
+    schedules are uniformized host-side (node statics to the max bucket,
+    tile counts padded with no-op tiles) and stacked into ``(P, ...)``
+    `shard_map` operands; each device runs its own forward/backward over
+    its batch's blocks and gradients psum into the replicated global
+    gradient of the UNION batch's masked loss — the sampled counterpart of
+    `repro.distributed.graph_shard.make_sharded_train_step`, sharing the
+    Plan IR's jit-argument convention (one executable per shape bucket).
+
+    The P batches of one step must agree on schedule knobs (same
+    `AggConfig` per layer) to share one set of `shard_map` statics.  Pow2
+    bucketing makes that the common case, but block frontier sizes vary
+    stochastically, so a step whose batches straddle a pow2 node-bucket
+    boundary can mix configs — those minority batches are repartitioned
+    under the step's widest-bucket config (memoized on their cache
+    entries) rather than aborting the run.
+    """
+
+    def __init__(self, cfg: GNNConfig, opt, num_shards: int, *,
+                 jit: bool = True, mesh=None):
+        from repro.distributed.graph_shard import shard_mesh
+        if cfg.arch not in ("gcn", "gin"):
+            raise ValueError(
+                f"sampled training supports gcn/gin, not {cfg.arch!r}")
+        self.cfg = cfg
+        self.opt = opt
+        self.num_shards = num_shards
+        self.mesh = mesh if mesh is not None else shard_mesh(num_shards)
+        self.jit = jit
+        self._fns: dict[tuple, object] = {}
+        self.traces = 0
+
+    def __call__(self, state, batches: Sequence[TrainBatch]):
+        if len(batches) != self.num_shards:
+            raise ValueError(
+                f"need {self.num_shards} batches per step, got {len(batches)}")
+        key, operands, statics = self._stack(batches)
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = self._fns[key] = self._build(statics)
+        return fn(state, *operands)
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self._fns)
+
+    # -------------- host-side uniformize + stack --------------
+
+    @staticmethod
+    def _replan(ent, cfg_t):
+        """Repartition a cache entry's block under a different `AggConfig`
+        (memoized on the entry): the rare batch whose pow2 node bucket —
+        and therefore heuristic config — disagrees with its step-mates'.
+        Static edge values are recovered from the schedule layout, exactly
+        as `core.shard.shard_plan` does."""
+        memo = ent.extras.setdefault("replans", {})
+        plan = memo.get(cfg_t)
+        if plan is None:
+            from repro.core.partition import (partition_graph,
+                                              transpose_graph)
+            from repro.core.plan import Plan
+            src = ent.plan
+            ev = src.partition.edge_values_csr()
+            part = partition_graph(src.graph, gs=cfg_t.gs, gpt=cfg_t.gpt,
+                                   ont=cfg_t.ont, src_win=cfg_t.src_win,
+                                   edge_vals=ev)
+            part_bwd = eperm = None
+            if src.partition_bwd is not None:
+                gT, ev_t, eperm = transpose_graph(src.graph, ev)
+                part_bwd = partition_graph(gT, gs=cfg_t.gs, gpt=cfg_t.gpt,
+                                           ont=cfg_t.ont,
+                                           src_win=cfg_t.src_win,
+                                           edge_vals=ev_t)
+            plan = memo[cfg_t] = Plan(
+                graph=src.graph, partition=part, config=cfg_t,
+                graph_props=None, arch=src.arch, perm=None, tuner=None,
+                stats={}, reduce_dim_first=src.reduce_dim_first,
+                partition_bwd=part_bwd, edge_perm_bwd=eperm)
+        return plan
+
+    def _stack(self, batches):
+        import jax.numpy as jnp
+
+        from repro.core.partition import pad_partition_tiles
+        from repro.kernels.ops import sched_statics_for
+
+        statics, blocks, layer_shapes = [], [], []
+        for l in range(self.cfg.num_layers):
+            entries = [b.entries[l] for b in batches]
+            plans = [e.plan for e in entries]
+            # the widest node bucket's config fits every block of the step
+            c = max(plans, key=lambda p: (p.partition.num_nodes,
+                                          p.config.src_win)).config
+            plans = [p if p.config == c else self._replan(e, c)
+                     for e, p in zip(entries, plans)]
+            n_t = max(p.partition.num_nodes for p in plans)
+            t_f = max(p.partition.num_tiles for p in plans)
+            parts = [pad_partition_tiles(p.partition, t_f) for p in plans]
+            st_f = sched_statics_for(gs=c.gs, gpt=c.gpt, ont=c.ont,
+                                     src_win=c.src_win, num_nodes=n_t)
+            st_b = None
+            arrs_b = None
+            if plans[0].partition_bwd is not None:
+                t_b = max(p.partition_bwd.num_tiles for p in plans)
+                parts_b = [pad_partition_tiles(p.partition_bwd, t_b)
+                           for p in plans]
+                st_b = st_f
+                arrs_b = self._stack_parts(parts_b, jnp)
+            statics.append((st_f, st_b, c.dt, c.variant))
+            blocks.append((self._stack_parts(parts, jnp), arrs_b))
+            layer_shapes.append((n_t, t_f,
+                                 None if st_b is None else arrs_b[0].shape))
+        n0 = statics[0][0][4]
+        n_last = statics[-1][0][4]
+        feat = np.zeros((len(batches), n0, self.cfg.in_dim), np.float32)
+        labels = np.zeros((len(batches), n_last), np.int32)
+        mask = np.zeros((len(batches), n_last), np.float32)
+        for p, b in enumerate(batches):
+            feat[p, : b.feat.shape[0]] = b.feat
+            labels[p, : b.labels.shape[0]] = b.labels
+            mask[p, : b.mask.shape[0]] = b.mask
+        # bucket key = exactly what the executable depends on: the
+        # uniformized statics + stacked operand shapes (NOT the raw
+        # per-batch keys — their ordered product would fragment the cache)
+        key = (tuple(statics), tuple(layer_shapes))
+        return key, (jnp.asarray(feat), jnp.asarray(labels),
+                     jnp.asarray(mask), tuple(blocks)), statics
+
+    @staticmethod
+    def _stack_parts(parts, jnp) -> tuple:
+        # sched_arrays layout; edge members dropped (see SampledTrainStep)
+        from repro.kernels.ops import _SCHED_ARRAY_FIELDS
+        return tuple(
+            jnp.stack([np.asarray(getattr(p, f)) for p in parts])
+            for f in _SCHED_ARRAY_FIELDS[:5]) + (None, None, None)
+
+    # -------------- per-bucket executable --------------
+
+    def _build(self, statics):
+        import jax
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
+        from repro.core.plan import Plan
+        from repro.distributed.graph_shard import (SHARD_AXIS,
+                                                   local_step_value_and_grad,
+                                                   squeeze_shard_args)
+        from repro.models.gnn import gnn_block_logits
+        from repro.optim.adamw import adamw_update
+
+        cfg, opt = self.cfg, self.opt
+
+        def local_step(params, feat_l, labels_l, mask_l, blocks):
+            feat_l, labels_l, mask_l = feat_l[0], labels_l[0], mask_l[0]
+            execs = [Plan.executor_from_args(
+                st, (squeeze_shard_args(a_f), squeeze_shard_args(a_b)),
+                backend=cfg.backend)
+                for st, (a_f, a_b) in zip(statics, blocks)]
+            return local_step_value_and_grad(
+                lambda p: gnn_block_logits(cfg, p, feat_l, execs),
+                params, labels_l, mask_l)
+
+        sm = shard_map(local_step, mesh=self.mesh,
+                       in_specs=(P(), P(SHARD_AXIS), P(SHARD_AXIS),
+                                 P(SHARD_AXIS), P(SHARD_AXIS)),
+                       out_specs=(P(), P(), P()), check_vma=False)
+
+        def step(state, feat, labels, mask, blocks):
+            self.traces += 1                       # trace-time side effect
+            params, opt_state = state
+            grads, loss, metrics = sm(params, feat, labels, mask, blocks)
             params, opt_state, om = adamw_update(opt, grads, opt_state,
                                                  params)
             return (params, opt_state), {**metrics, **om}

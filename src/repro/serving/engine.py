@@ -33,22 +33,6 @@ __all__ = ["ServingConfig", "ServingEngine"]
 _JIT_CACHE_MAX = 128
 
 
-class _ScheduleView:
-    """Duck-typed DeviceSchedule over traced tile arrays + static ints —
-    lets the shared jitted forward close over NOTHING entry-specific (no
-    device arrays pinned by the closure)."""
-
-    def __init__(self, arrs, *, gs, gpt, ont, src_win, num_nodes,
-                 padded_src_rows, padded_out_rows):
-        (self.nbrs, self.edge_val, self.local_node,
-         self.tile_node_block, self.tile_window) = arrs
-        self.gs, self.gpt, self.ont, self.src_win = gs, gpt, ont, src_win
-        self.num_nodes = num_nodes
-        self.padded_src_rows = padded_src_rows
-        self.padded_out_rows = padded_out_rows
-        self.num_tiles = int(self.nbrs.shape[0])
-
-
 @dataclasses.dataclass(frozen=True)
 class ServingConfig:
     hops: Optional[int] = None      # ego-graph radius; default = num_layers
@@ -58,7 +42,8 @@ class ServingConfig:
     bucket_shapes: bool = True      # pad node/tile counts to powers of two
     tune_mode: str = "model"
     tune_iters: int = 6
-    max_plans: int = 64
+    max_plans: Optional[int] = 64   # plan-level LRU bound (None = unbounded)
+    max_configs: Optional[int] = None  # config-memo LRU bound
     jit: bool = True
 
 
@@ -120,7 +105,8 @@ class ServingEngine:
         self.cache = PlanCache(
             backend=cfg.backend, tune_mode=self.serving.tune_mode,
             tune_iters=self.serving.tune_iters,
-            max_entries=self.serving.max_plans,
+            max_plans=self.serving.max_plans,
+            max_configs=self.serving.max_configs,
             bucket_shapes=self.serving.bucket_shapes)
         self.batcher = MicroBatcher(
             max_batch=self.serving.max_batch,
@@ -170,12 +156,13 @@ class ServingEngine:
     def _make_apply(self, ent):
         """Build the forward for a cache entry.
 
-        GCN/GIN: the jitted forward takes the schedule tensors as ARGUMENTS
-        (not closure constants), so one executable is shared by every cache
-        entry whose schedule/feature shapes and agg statics match — XLA
-        neither re-traces nor constant-folds per subgraph.  GAT's dynamic
-        edge tensors vary per subgraph in unbucketed (E,) shapes, so it
-        keeps a per-entry jit.
+        GCN/GIN: the jitted forward follows the Plan IR's jit-argument
+        convention (`Plan.jit_args` / `Plan.jit_statics`): schedule tensors
+        are ARGUMENTS (not closure constants), so one executable is shared
+        by every cache entry whose statics + shapes match — XLA neither
+        re-traces nor constant-folds per subgraph.  GAT's dynamic edge
+        tensors vary per subgraph in unbucketed (E,) shapes, so it keeps a
+        per-entry jit.
         """
         cfg = self.cfg
         if cfg.arch == "gat" or not self.serving.jit:
@@ -184,25 +171,16 @@ class ServingEngine:
             fn = jax.jit(model.logits) if self.serving.jit else model.logits
             return fn
 
-        sched = ent.executor.sched
-        acfg = ent.plan.config
-        arrs = (sched.nbrs, sched.edge_val, sched.local_node,
-                sched.tile_node_block, sched.tile_window)
-        key = (acfg.gs, acfg.gpt, acfg.ont, acfg.src_win, acfg.dt,
-               acfg.variant, cfg.backend, sched.num_nodes,
-               tuple(a.shape for a in arrs))
+        from repro.core.plan import Plan
+        statics = ent.plan.jit_statics()
+        args = ent.plan.jit_args()
+        key = (statics, cfg.backend,
+               tuple(jax.tree_util.tree_map(lambda a: a.shape, args)))
         shared = self._jit_cache.get(key)
         if shared is None:
-            statics = dict(gs=acfg.gs, gpt=acfg.gpt, ont=acfg.ont,
-                           src_win=acfg.src_win, num_nodes=sched.num_nodes,
-                           padded_src_rows=sched.padded_src_rows,
-                           padded_out_rows=sched.padded_out_rows)
-
-            def apply(params, feat, arrs, _dt=acfg.dt, _variant=acfg.variant):
-                from repro.core.aggregate import PlanExecutor
-                ex = PlanExecutor.from_schedule(
-                    _ScheduleView(arrs, **statics), dt=_dt, variant=_variant,
-                    backend=cfg.backend)
+            def apply(params, feat, args, _statics=statics):
+                ex = Plan.executor_from_args(_statics, args,
+                                             backend=cfg.backend)
                 m = GNNModel(cfg=cfg, plan=None, executor=ex, params=None)
                 return m.logits(params, feat)
 
@@ -212,7 +190,7 @@ class ServingEngine:
                 self._jit_cache.popitem(last=False)
         else:
             self._jit_cache.move_to_end(key)
-        return lambda params, feat, _arrs=arrs: shared(params, feat, _arrs)
+        return lambda params, feat, _args=args: shared(params, feat, _args)
 
     # ---------------- request API (micro-batched) ----------------
 

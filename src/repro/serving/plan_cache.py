@@ -28,10 +28,11 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
-from repro.core.advisor import AggregationPlan, plan_for
+from repro.core.advisor import plan_for
 from repro.core.aggregate import PlanExecutor
 from repro.core.model import AggConfig
-from repro.core.partition import GroupPartition
+from repro.core.partition import pad_partition_tiles
+from repro.core.plan import Plan
 from repro.graphs.csr import CSRGraph
 
 __all__ = [
@@ -78,34 +79,15 @@ def graph_key(g: CSRGraph, edge_vals: Optional[np.ndarray],
     return (h.hexdigest(), tuple(arch_key))
 
 
-def pad_partition_tiles(p: GroupPartition, target_tiles: int) -> GroupPartition:
-    """Append no-op tiles (zero edge values, last tile's block/window) until
-    num_tiles == target_tiles.  edge_slot/edge_pos stay valid: original flat
-    group slots are unchanged, new slots only appended."""
-    T = p.num_tiles
-    if target_tiles <= T or T == 0:
-        return p
-    pad = target_tiles - T
-    win = int(p.tile_window[-1])
-    blk = int(p.tile_node_block[-1])
-    return dataclasses.replace(
-        p,
-        nbrs=np.concatenate(
-            [p.nbrs, np.full((pad, p.gpt, p.gs), win * p.src_win, np.int32)]),
-        edge_val=np.concatenate(
-            [p.edge_val, np.zeros((pad, p.gpt, p.gs), np.float32)]),
-        local_node=np.concatenate(
-            [p.local_node, np.zeros((pad, p.gpt), np.int32)]),
-        tile_node_block=np.concatenate(
-            [p.tile_node_block, np.full(pad, blk, np.int32)]),
-        tile_window=np.concatenate(
-            [p.tile_window, np.full(pad, win, np.int32)]),
-    )
+# pad_partition_tiles moved to `repro.core.partition` (the shard splitter
+# needs it below the serving layer); re-exported here for back-compat.
+
+_UNSET = object()   # "max_plans not given" sentinel (None means unbounded)
 
 
 @dataclasses.dataclass
 class CacheEntry:
-    plan: AggregationPlan
+    plan: Plan
     executor: PlanExecutor
     apply_fn: Optional[Callable] = None   # engine-installed jitted forward
     hits: int = 0
@@ -113,16 +95,30 @@ class CacheEntry:
 
 
 class PlanCache:
-    """LRU plan cache + fingerprint->config memo (see module docstring)."""
+    """LRU plan cache + fingerprint->config memo (see module docstring).
+
+    Memory bounds: ``max_plans`` LRU-bounds the ready-plan level (None =
+    unbounded; ``max_entries`` is the legacy name for the same knob and
+    keeps its old default of 64 when ``max_plans`` is not given), and
+    ``max_configs`` LRU-bounds the fingerprint->config memo (None =
+    unbounded — configs are tiny, but a long-tailed serving workload can
+    accumulate fingerprints forever).  Evictions from both levels are
+    surfaced in `stats()`.
+    """
 
     def __init__(self, *, backend: str = "xla", tune_mode: str = "model",
                  tune_iters: int = 8, max_entries: int = 64,
+                 max_plans: Optional[int] = _UNSET,
+                 max_configs: Optional[int] = None,
                  bucket_shapes: bool = True, seed: int = 0,
                  with_backward: bool = False, config_fn=None):
         self.backend = backend
         self.tune_mode = tune_mode
         self.tune_iters = tune_iters
-        self.max_entries = max_entries
+        # not-given falls back to the legacy max_entries knob; an EXPLICIT
+        # max_plans=None means unbounded (the ServingConfig contract)
+        self.max_plans = max_entries if max_plans is _UNSET else max_plans
+        self.max_configs = max_configs
         self.bucket_shapes = bucket_shapes
         self.seed = seed
         # config_fn: optional (CSRGraph) -> AggConfig consulted on a
@@ -139,11 +135,12 @@ class PlanCache:
         # step's jit cache buckets both directions.
         self.with_backward = with_backward
         self._plans: "OrderedDict[tuple, CacheEntry]" = OrderedDict()
-        self._configs: dict[tuple, AggConfig] = {}
+        self._configs: "OrderedDict[tuple, AggConfig]" = OrderedDict()
         self.exact_hits = 0
         self.config_hits = 0
         self.misses = 0
         self.evictions = 0
+        self.config_evictions = 0
 
     def get_or_build(self, g: CSRGraph, *, arch: str, in_dim: int,
                      hidden_dim: int, num_layers: int,
@@ -161,19 +158,20 @@ class PlanCache:
         fp = graph_fingerprint(g, arch_key)
         config = self._configs.get(fp)
         if config is not None:
+            self._configs.move_to_end(fp)
             self.config_hits += 1
         else:
             self.misses += 1
             if self.config_fn is not None:
                 config = self.config_fn(g)
-                self._configs[fp] = config
+                self._set_config(fp, config)
         plan = plan_for(g, arch=arch, in_dim=in_dim, hidden_dim=hidden_dim,
                         num_layers=num_layers, edge_vals=edge_vals,
                         config=config, tune_mode=self.tune_mode,
                         tune_iters=self.tune_iters, seed=self.seed,
                         with_backward=self.with_backward)
         if config is None:
-            self._configs[fp] = plan.config
+            self._set_config(fp, plan.config)
         if self.bucket_shapes:
             part = pad_partition_tiles(
                 plan.partition, bucket_pow2(plan.partition.num_tiles))
@@ -183,13 +181,20 @@ class PlanCache:
                     part_bwd, bucket_pow2(part_bwd.num_tiles))
             plan = dataclasses.replace(plan, partition=part,
                                        partition_bwd=part_bwd)
-        ent = CacheEntry(plan=plan,
-                         executor=PlanExecutor(plan, backend=self.backend))
+        ent = CacheEntry(plan=plan, executor=plan.executor(self.backend))
         self._plans[key] = ent
-        while len(self._plans) > self.max_entries:
+        while self.max_plans is not None and len(self._plans) > self.max_plans:
             self._plans.popitem(last=False)
             self.evictions += 1
         return ent
+
+    def _set_config(self, fp: tuple, config: AggConfig) -> None:
+        self._configs[fp] = config
+        self._configs.move_to_end(fp)
+        while (self.max_configs is not None
+               and len(self._configs) > self.max_configs):
+            self._configs.popitem(last=False)
+            self.config_evictions += 1
 
     @property
     def num_plans(self) -> int:
@@ -211,4 +216,5 @@ class PlanCache:
             "plans": self.num_plans,
             "configs": self.num_configs,
             "evictions": self.evictions,
+            "config_evictions": self.config_evictions,
         }
