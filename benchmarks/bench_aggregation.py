@@ -74,6 +74,25 @@ def run():
         emit(f"agg/{name}/node_centric", t_node * 1e6,
              f"max_deg_pad={md}")
 
+        # bf16 vs f32 on the SAME schedule: measured latency plus modeled
+        # DMA bytes — the memory-bound term halves with bytes_feat=2
+        import dataclasses
+        cfg16 = dataclasses.replace(cfg, feat_dtype="bfloat16")
+        feat16 = feat.astype(jnp.bfloat16)
+        grp16 = jax.jit(lambda f: aggregate(f, sched, backend="xla",
+                                            out_dtype=jnp.bfloat16))
+        t_grp16 = time_fn(grp16, feat16)
+        term32 = km.terms(props, DIM, cfg, tiles=p.num_tiles)
+        term16 = km.terms(props, DIM, cfg16, tiles=p.num_tiles)
+        tpu16 = term16["latency"]
+        emit(f"agg/{name}/group_bf16", t_grp16 * 1e6,
+             f"vs_f32={t_grp / t_grp16:.2f}x "
+             f"model_bytes_f32={term32['bytes']:.0f} "
+             f"model_bytes_bf16={term16['bytes']:.0f} "
+             f"bytes_ratio={term16['bytes'] / term32['bytes']:.2f} "
+             f"tpu_model_us_bf16={tpu16 * 1e6:.1f} "
+             f"tpu_model_speedup={tpu / tpu16:.2f}x")
+
 
 if __name__ == "__main__":
     run()

@@ -71,6 +71,30 @@ def _worker(smoke: bool) -> None:
              f"vs_1dev={t1 / t:.2f}x;edge_balance={st['edge_balance']:.2f};"
              f"max_halo_frac={halo:.2f};tiles={st['tiles_per_shard']}")
 
+    # bf16 halo exchange: same schedule knobs, dtype policy flipped — the
+    # all-gathered activation matrix halves its bytes.  Same-seed params,
+    # so the loss is directly comparable to the f32 rows.
+    import dataclasses
+
+    P = 2
+    cfg16 = dataclasses.replace(cfg, feat_dtype="bfloat16")
+    model16 = build_gnn(
+        g, cfg16, reorder="on", tune_iters=2 if smoke else 4,
+        with_backward=True,
+        config=dataclasses.replace(model.plan.config,
+                                   feat_dtype="bfloat16"))
+    shards16 = model16.plan.shards(P)
+    state16 = (model16.params, adamw_init(model16.params))
+    step16 = make_sharded_train_step(cfg16, shards16, opt)
+    t16 = time_fn(lambda: step16(state16, batch)[1]["loss"],
+                  warmup=1, iters=iters)
+    n_pad = shards16.spec.padded_nodes
+    gathered_f32 = n_pad * hidden * 4
+    gathered_bf16 = n_pad * hidden * 2
+    emit(f"shard_step/gcn/p{P}/n{num_nodes}/bf16", t16 * 1e6,
+         f"halo_gather_bytes={gathered_bf16};f32_bytes={gathered_f32};"
+         f"exchange_ratio={gathered_bf16 / gathered_f32:.2f}x")
+
 
 def run(smoke: bool = True) -> None:
     """Spawn the forced-device subprocess and stream its CSV lines."""
@@ -86,7 +110,17 @@ def run(smoke: bool = True) -> None:
     if smoke:
         cmd.append("--smoke")
     r = subprocess.run(cmd, env=env, text=True, capture_output=True)
-    sys.stdout.write(r.stdout)
+    # re-emit the worker's CSV rows through common.emit so run.py's json
+    # capture sees them (the subprocess's own capture dies with it)
+    from benchmarks.common import emit
+    for line in r.stdout.splitlines():
+        parts = line.split(",", 2)
+        try:
+            us = float(parts[1])
+        except (IndexError, ValueError):
+            print(line)
+            continue
+        emit(parts[0], us, parts[2] if len(parts) > 2 else "")
     if r.returncode != 0:
         sys.stderr.write(r.stderr)
         raise RuntimeError(f"bench_shard worker failed ({r.returncode})")

@@ -40,36 +40,53 @@ def run(smoke: bool = True):
     feat = rng.standard_normal((g.num_nodes, in_dim)).astype(np.float32)
     labels = rng.integers(0, 4, g.num_nodes).astype(np.int32)
 
+    from repro.core.model import KernelModel
+    from repro.core.extractor import extract_graph_props
+
+    km = KernelModel()
+    props = extract_graph_props(g, detect_communities=False)
+
     for arch in ["gcn", "gat"]:
         ref_step = None
+        # bf16-vs-f32 on the static-edge-value arch (GAT's softmax path
+        # stays f32-scored); params/accumulation are f32 in both rows
+        dtypes = ["float32", "bfloat16"] if arch == "gcn" else ["float32"]
         for backend in backends:
-            cfg = GNNConfig(arch=arch, in_dim=in_dim, hidden_dim=hidden,
-                            num_classes=4, num_layers=2, backend=backend)
-            # xla baseline = natively differentiated reference; pallas rows
-            # carry the transposed-schedule custom VJP
-            model = build_gnn(g, cfg, reorder="off",
-                              tune_iters=2 if smoke else 4,
-                              with_backward=(backend != "xla"))
-            opt = AdamWConfig(lr=1e-3)
-            step_fn = make_gnn_train_step(model, opt)
-            batch = {"feat": jnp.asarray(feat), "labels": jnp.asarray(labels)}
-            state = (model.params, adamw_init(model.params))
+            for feat_dtype in dtypes:
+                cfg = GNNConfig(arch=arch, in_dim=in_dim, hidden_dim=hidden,
+                                num_classes=4, num_layers=2, backend=backend,
+                                feat_dtype=feat_dtype)
+                # xla baseline = natively differentiated reference; pallas
+                # rows carry the transposed-schedule custom VJP
+                model = build_gnn(g, cfg, reorder="off",
+                                  tune_iters=2 if smoke else 4,
+                                  with_backward=(backend != "xla"))
+                opt = AdamWConfig(lr=1e-3)
+                step_fn = make_gnn_train_step(model, opt)
+                batch = {"feat": jnp.asarray(feat),
+                         "labels": jnp.asarray(labels)}
+                state = (model.params, adamw_init(model.params))
 
-            def one_step(state=state, step_fn=step_fn, batch=batch):
-                new_state, metrics = step_fn(state, batch)
-                return metrics["loss"]
+                def one_step(state=state, step_fn=step_fn, batch=batch):
+                    new_state, metrics = step_fn(state, batch)
+                    return metrics["loss"]
 
-            t = time_fn(one_step, warmup=1, iters=iters)
-            if backend == "xla":
-                ref_step = t
-                speed = ""
-            else:
-                speed = (f";vs_xla={ref_step / t:.2f}x"
-                         if ref_step is not None else "")
-            pb = model.plan.partition_bwd
-            emit(f"train_step/{arch}/{backend}/n{num_nodes}", t * 1e6,
-                 f"tiles={model.plan.stats['tiles']};"
-                 f"bwd_tiles={pb.num_tiles if pb is not None else '-'}{speed}")
+                t = time_fn(one_step, warmup=1, iters=iters)
+                if backend == "xla" and feat_dtype == "float32":
+                    ref_step = t
+                    speed = ""
+                else:
+                    speed = (f";vs_xla_f32={ref_step / t:.2f}x"
+                             if ref_step is not None else "")
+                pb = model.plan.partition_bwd
+                dim = hidden if model.plan.reduce_dim_first else in_dim
+                mbytes = km.terms(props, dim, model.plan.config,
+                                  tiles=model.plan.stats["tiles"])["bytes"]
+                emit(f"train_step/{arch}/{backend}/{feat_dtype}"
+                     f"/n{num_nodes}", t * 1e6,
+                     f"tiles={model.plan.stats['tiles']};"
+                     f"bwd_tiles={pb.num_tiles if pb is not None else '-'};"
+                     f"model_bytes={mbytes:.0f}{speed}")
 
 
 def main(argv=None) -> int:

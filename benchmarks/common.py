@@ -2,12 +2,30 @@
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import numpy as np
 
-__all__ = ["time_fn", "emit", "load_replica"]
+__all__ = ["time_fn", "emit", "load_replica", "start_capture",
+           "take_captured_rows"]
+
+# When capture is active (benchmarks.run --json-dir), every emit() row is
+# also recorded here so run.py can write machine-readable BENCH_<name>.json
+# files — the repo's perf trajectory artifact.
+_captured: Optional[list] = None
+
+
+def start_capture() -> None:
+    global _captured
+    _captured = []
+
+
+def take_captured_rows() -> list:
+    """Return (and reset) the rows emitted since `start_capture`."""
+    global _captured
+    rows, _captured = (_captured or []), []
+    return rows
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -27,6 +45,9 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 def emit(name: str, us_per_call: float, derived: str = ""):
     """CSV contract: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.1f},{derived}")
+    if _captured is not None:
+        _captured.append({"name": name, "us_per_call": float(us_per_call),
+                          "derived": derived})
 
 
 def load_replica(name: str, *, max_nodes: int = 4000, seed: int = 0):

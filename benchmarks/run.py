@@ -1,10 +1,18 @@
 """Benchmark entry point: one section per paper table/figure + the roofline
 aggregation.  CSV contract per line: name,us_per_call,derived.
 
-    PYTHONPATH=src python -m benchmarks.run [section ...]
+    PYTHONPATH=src python -m benchmarks.run [--json-dir DIR] [section ...]
+
+``--json-dir`` additionally writes one machine-readable
+``BENCH_<section>.json`` per section — every `emit()` row (latency +
+modeled bytes, keyed by backend/dtype inside the row names) plus wall time
+— giving the repo a perf trajectory CI can archive as an artifact.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -27,21 +35,46 @@ SECTIONS = [
 ]
 
 
-def main() -> int:
+def main(argv=None) -> int:
     import importlib
-    want = set(sys.argv[1:])
+
+    from benchmarks import common
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--json-dir", default=None,
+                   help="write BENCH_<section>.json per section here")
+    p.add_argument("sections", nargs="*",
+                   help="substring filters over section module names")
+    args = p.parse_args(argv)
+    want = set(args.sections)
+    if args.json_dir:
+        os.makedirs(args.json_dir, exist_ok=True)
+
     failed = []
     for title, module in SECTIONS:
         if want and not any(w in module for w in want):
             continue
         print(f"# === {title} ===")
+        if args.json_dir:
+            common.start_capture()
         t0 = time.time()
+        ok = True
         try:
             importlib.import_module(module).run()
         except Exception:
             traceback.print_exc()
             failed.append(module)
-        print(f"# ({module}: {time.time() - t0:.1f}s)")
+            ok = False
+        wall = time.time() - t0
+        print(f"# ({module}: {wall:.1f}s)")
+        if args.json_dir:
+            short = module.rsplit(".", 1)[-1]
+            path = os.path.join(args.json_dir, f"BENCH_{short}.json")
+            with open(path, "w") as f:
+                json.dump({"section": title, "module": module, "ok": ok,
+                           "wall_s": round(wall, 2),
+                           "rows": common.take_captured_rows()}, f, indent=1)
+            print(f"# wrote {path}")
     if failed:
         print(f"# FAILED sections: {failed}")
         return 1

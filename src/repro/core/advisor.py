@@ -36,7 +36,8 @@ def advise(g: CSRGraph, *, arch: str = "gcn", in_dim: int = 128,
            reorder: str = "auto",        # "auto" | "on" | "off"
            tune_mode: str = "model", tune_iters: int = 12,
            config: Optional[AggConfig] = None, seed: int = 0,
-           with_backward: bool = False) -> AggregationPlan:
+           with_backward: bool = False,
+           feat_dtype: Optional[str] = None) -> AggregationPlan:
     """Run the full GNNAdvisor decision loop for one input.
 
     reorder="auto" applies §6.1 renumbering unless the input already shows
@@ -60,13 +61,14 @@ def advise(g: CSRGraph, *, arch: str = "gcn", in_dim: int = 128,
         perm = renumber(g, seed=seed)
         g_run = g.permute(perm)
         if edge_vals is not None:
-            vals_run = _permute_edge_vals(g, perm, edge_vals)
+            vals_run = g.permute_edge_vals(perm, edge_vals)
         props = extract_graph_props(g_run, detect_communities=False)
 
     plan = plan_for(g_run, arch=arch, in_dim=in_dim, hidden_dim=hidden_dim,
                     num_layers=num_layers, edge_vals=vals_run, config=config,
                     tune_mode=tune_mode, tune_iters=tune_iters, seed=seed,
-                    props=props, with_backward=with_backward)
+                    props=props, with_backward=with_backward,
+                    feat_dtype=feat_dtype)
     plan.perm = perm
     return plan
 
@@ -77,7 +79,8 @@ def plan_for(g: CSRGraph, *, arch: str = "gcn", in_dim: int = 128,
              config: Optional[AggConfig] = None,
              tune_mode: str = "model", tune_iters: int = 12,
              seed: int = 0, props: Optional[GraphProps] = None,
-             with_backward: bool = False) -> AggregationPlan:
+             with_backward: bool = False,
+             feat_dtype: Optional[str] = None) -> AggregationPlan:
     """Pure planning: props -> (tune unless `config` given) -> partition.
 
     Unlike `advise` this never renumbers or mutates the input — it is the
@@ -97,6 +100,11 @@ def plan_for(g: CSRGraph, *, arch: str = "gcn", in_dim: int = 128,
         config and attach it as ``plan.partition_bwd`` (+``edge_perm_bwd``),
         so `PlanExecutor` can run `jax.grad` through the Pallas backends.
         Off by default — inference-only plans skip the extra partitioning.
+    feat_dtype : optional feature/activation dtype policy ("float32" /
+        "bfloat16").  Stamped onto the plan's `AggConfig` and handed to the
+        tuner, which prices the halved window bytes and applies the
+        dtype-tightened feasibility (Eq. 4 + dt alignment).  None keeps the
+        given ``config``'s policy (or "float32" when tuning from scratch).
 
     Returns a `Plan`; feed it to `core.aggregate.PlanExecutor` (or call
     ``plan.executor(backend)``).
@@ -115,8 +123,26 @@ def plan_for(g: CSRGraph, *, arch: str = "gcn", in_dim: int = 128,
         tuner_res = tune(g, archp.hidden_dim if archp.reduce_dim_first
                          else archp.in_dim,
                          props=props, mode=tune_mode, iters=tune_iters,
-                         seed=seed)
+                         seed=seed, feat_dtype=feat_dtype or "float32")
         config = tuner_res.best
+    else:
+        if feat_dtype is not None and config.feat_dtype != feat_dtype:
+            import dataclasses as _dc
+            config = _dc.replace(config, feat_dtype=feat_dtype)
+        # validate the FINAL dtype's dim-tile alignment for every caller-
+        # supplied config (restamped or pre-stamped): an unaligned dt
+        # would make dim_tile silently execute a different tile than the
+        # plan/jit_statics/KernelModel claim.  Capacity feasibility stays
+        # the caller's business — explicit configs are "exactly these
+        # knobs" by contract.
+        from repro.core.model import feat_dtype_align
+        align = feat_dtype_align(config.feat_dtype)
+        if config.dt % align:
+            raise ValueError(
+                f"config dt={config.dt} is not a multiple of the "
+                f"{config.feat_dtype} alignment unit {align} — retune "
+                f"with feat_dtype={config.feat_dtype!r} or pick an "
+                f"aligned dt")
     part = partition_graph(g, gs=config.gs, gpt=config.gpt, ont=config.ont,
                            src_win=config.src_win, edge_vals=edge_vals)
     part_bwd = edge_perm = None
@@ -131,12 +157,3 @@ def plan_for(g: CSRGraph, *, arch: str = "gcn", in_dim: int = 128,
         reduce_dim_first=archp.reduce_dim_first,
         partition_bwd=part_bwd, edge_perm_bwd=edge_perm,
     )
-
-
-def _permute_edge_vals(g: CSRGraph, perm: np.ndarray,
-                       edge_vals: np.ndarray) -> np.ndarray:
-    """Carry per-edge values through `CSRGraph.permute`'s exact edge order."""
-    new_rows = np.repeat(perm, g.degrees)
-    new_cols = perm[g.indices]
-    order = np.lexsort((new_cols, new_rows))
-    return np.asarray(edge_vals, dtype=np.float32)[order]

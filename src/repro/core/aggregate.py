@@ -28,6 +28,9 @@ class PlanExecutor:
         self.backend = backend
         self.dt = plan.config.dt
         self.variant = plan.config.variant
+        # outputs follow the plan's dtype policy (f32 accumulation inside;
+        # see the dtype rules in repro.kernels.ops)
+        self.out_dtype = jnp.dtype(plan.config.feat_dtype)
         # cache the inverse node permutation once — aggregate_original_order
         # used to argsort on every call.
         self._perm = None if plan.perm is None else jnp.asarray(plan.perm)
@@ -37,7 +40,8 @@ class PlanExecutor:
     @classmethod
     def from_schedule(cls, sched: DeviceSchedule, *, dt: int, variant: str,
                       backend: str = "pallas_interpret",
-                      sched_bwd: DeviceSchedule = None) -> "PlanExecutor":
+                      sched_bwd: DeviceSchedule = None,
+                      out_dtype="float32") -> "PlanExecutor":
         """Plan-less executor over a bare schedule.
 
         Shared jitted functions (the serving engine's forwards, the sampled
@@ -56,6 +60,8 @@ class PlanExecutor:
         sched_bwd : optional TRANSPOSED-graph schedule (same duck typing);
             when given the executor is differentiable on every backend —
             the sampled mini-batch trainer passes one per layer block.
+        out_dtype : dtype (name) of the executor's outputs — the plan's
+            ``AggConfig.feat_dtype`` policy; accumulation is f32 always.
 
         Without ``sched_bwd`` the result is forward-only (exactly what
         serving needs).  Example:
@@ -70,14 +76,17 @@ class PlanExecutor:
         ex.backend = backend
         ex.dt = dt
         ex.variant = variant
+        ex.out_dtype = jnp.dtype(out_dtype)
         ex._perm = ex._inv_perm = None
         return ex
 
     def __call__(self, feat: jax.Array) -> jax.Array:
-        """feat: (N, D) in the plan's (renumbered) node order -> (N, D) f32."""
+        """feat: (N, D) in the plan's (renumbered) node order -> (N, D) in
+        the plan's ``feat_dtype`` (f32 unless a bf16 policy is active)."""
         return _kernel_aggregate(feat, self.sched, dt=self.dt,
                                  backend=self.backend, variant=self.variant,
-                                 sched_bwd=self.sched_bwd)
+                                 sched_bwd=self.sched_bwd,
+                                 out_dtype=self.out_dtype)
 
     def aggregate_edges(self, feat: jax.Array,
                         edge_values: jax.Array) -> jax.Array:
@@ -89,7 +98,8 @@ class PlanExecutor:
         return _kernel_aggregate(feat, self.sched, dt=self.dt,
                                  backend=self.backend, variant=self.variant,
                                  edge_values=edge_values,
-                                 sched_bwd=self.sched_bwd)
+                                 sched_bwd=self.sched_bwd,
+                                 out_dtype=self.out_dtype)
 
     def aggregate_original_order(self, feat_original: jax.Array) -> jax.Array:
         """Convenience: accepts/returns arrays in the ORIGINAL node order."""

@@ -27,7 +27,39 @@ from repro.core.extractor import GraphProps
 from repro.hw import TPU_V5E, TPUSpec
 
 __all__ = ["AggConfig", "paper_eq2_latency", "KernelModel", "vmem_working_set",
-           "config_is_feasible"]
+           "config_is_feasible", "config_infeasibility", "feat_dtype_align",
+           "feat_dtype_bytes"]
+
+# The end-to-end dtype policy's vocabulary.  ``feat_dtype`` names the dtype
+# of node features and activations flowing through the aggregation kernel;
+# accumulation is ALWAYS float32 (the kernels use preferred_element_type)
+# and parameters stay float32 — only the bandwidth-carrying tensors change.
+# Bytes per element feed Eq. 4 (VMEM working set) and the memory term of
+# `KernelModel`; the alignment unit is the vreg second-minor tile for the
+# dtype (8 rows f32, 16 rows for 16-bit types), which `dim_tile`
+# (kernels.ops) and the dt feasibility check below both honor.
+_FEAT_DTYPES = {"float32": (4, 8), "bfloat16": (2, 16), "float16": (2, 16)}
+
+
+def feat_dtype_bytes(feat_dtype: str) -> int:
+    """Bytes per feature element for a policy dtype name."""
+    try:
+        return _FEAT_DTYPES[feat_dtype][0]
+    except KeyError:
+        raise ValueError(
+            f"unknown feat_dtype {feat_dtype!r}; one of {sorted(_FEAT_DTYPES)}"
+        ) from None
+
+
+def feat_dtype_align(feat_dtype: str) -> int:
+    """Lane-tile alignment unit (rows of the second-minor dim) for a policy
+    dtype name — dim tiles must be a multiple of this."""
+    try:
+        return _FEAT_DTYPES[feat_dtype][1]
+    except KeyError:
+        raise ValueError(
+            f"unknown feat_dtype {feat_dtype!r}; one of {sorted(_FEAT_DTYPES)}"
+        ) from None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,9 +72,14 @@ class AggConfig:
     src_win: int = 512    # feature-window rows (TPU shared-memory analogue)
     ont: int = 8          # output rows per block (structural, sublane-aligned)
     variant: str = "folded"
+    feat_dtype: str = "float32"   # feature/activation dtype policy
 
     def astuple(self):
         return (self.gs, self.gpt, self.dt, self.src_win, self.ont)
+
+    @property
+    def bytes_feat(self) -> int:
+        return feat_dtype_bytes(self.feat_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -97,8 +134,13 @@ def predict_tiles(props: GraphProps, cfg: AggConfig) -> float:
     return max(padded / cfg.gpt, 1.0)
 
 
-def vmem_working_set(cfg: AggConfig, bytes_feat: int = 4) -> int:
-    """VMEM bytes per grid step (double-buffered window) — Eq. 4 analogue."""
+def vmem_working_set(cfg: AggConfig, bytes_feat: int | None = None) -> int:
+    """VMEM bytes per grid step (double-buffered window) — Eq. 4 analogue.
+
+    ``bytes_feat`` defaults to the config's own dtype policy
+    (``cfg.feat_dtype``); pass it explicitly only to price a hypothetical."""
+    if bytes_feat is None:
+        bytes_feat = cfg.bytes_feat
     window = 2 * cfg.src_win * cfg.dt * bytes_feat          # double-buffered
     gather_mat = cfg.gpt * cfg.src_win * 4
     if cfg.variant == "slot_onehot":
@@ -108,20 +150,37 @@ def vmem_working_set(cfg: AggConfig, bytes_feat: int = 4) -> int:
     return window + gather_mat + meta + out_block
 
 
-def config_is_feasible(cfg: AggConfig, *, hw: TPUSpec = TPU_V5E,
-                       bytes_feat: int = 4) -> bool:
-    """Eq. 3 + Eq. 4 feasibility, TPU-re-derived."""
+def config_infeasibility(cfg: AggConfig, *, hw: TPUSpec = TPU_V5E,
+                         bytes_feat: int | None = None) -> str | None:
+    """Eq. 3 + Eq. 4 feasibility, TPU-re-derived: None when the config is
+    feasible, else a human-readable reason naming the violated constraint
+    (the tuner surfaces it when rejection sampling exhausts the space)."""
+    if bytes_feat is None:
+        bytes_feat = cfg.bytes_feat
     # Eq. 4: VMEM capacity (use half of VMEM as the safety envelope).
-    if vmem_working_set(cfg, bytes_feat) > hw.vmem_bytes * 0.5:
-        return False
+    ws = vmem_working_set(cfg, bytes_feat)
+    if ws > hw.vmem_bytes * 0.5:
+        return (f"Eq. 4 VMEM working set {ws}B > half of "
+                f"{hw.name} VMEM ({hw.vmem_bytes / 2:.0f}B) at "
+                f"bytes_feat={bytes_feat}")
     # Eq. 3: per-group work must fit a sane VPU budget (avoid pathological
     # single-unit serialization): gs*dt elements per group-slot.
     if cfg.gs * cfg.dt > 64 * 1024:
-        return False
-    # structural alignment
-    if cfg.dt % 8 != 0 or cfg.src_win % 8 != 0:
-        return False
-    return True
+        return f"Eq. 3 per-group work gs*dt={cfg.gs * cfg.dt} > 64Ki"
+    # structural alignment: dim tiles must be lane-tile aligned for the
+    # feature dtype (8 for f32, 16 for 16-bit types), windows sublane-aligned
+    align = feat_dtype_align(cfg.feat_dtype)
+    if cfg.dt % align != 0:
+        return (f"dt={cfg.dt} not a multiple of the {cfg.feat_dtype} "
+                f"alignment unit {align}")
+    if cfg.src_win % 8 != 0:
+        return f"src_win={cfg.src_win} not a multiple of 8"
+    return None
+
+
+def config_is_feasible(cfg: AggConfig, *, hw: TPUSpec = TPU_V5E,
+                       bytes_feat: int | None = None) -> bool:
+    return config_infeasibility(cfg, hw=hw, bytes_feat=bytes_feat) is None
 
 
 @dataclasses.dataclass
@@ -131,7 +190,10 @@ class KernelModel:
     hw: TPUSpec = TPU_V5E
 
     def terms(self, props: GraphProps, dim: int, cfg: AggConfig,
-              *, tiles: float | None = None, bytes_feat: int = 4) -> dict:
+              *, tiles: float | None = None,
+              bytes_feat: int | None = None) -> dict:
+        if bytes_feat is None:
+            bytes_feat = cfg.bytes_feat
         T = float(tiles if tiles is not None else predict_tiles(props, cfg))
         J = max(math.ceil(dim / cfg.dt), 1)
         steps = T * J

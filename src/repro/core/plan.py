@@ -126,24 +126,30 @@ class Plan:
         edge count.  Only the dynamic edge-value path (GAT-type) needs
         them — pass True there.
         """
-        from repro.kernels.ops import sched_arrays
+        from repro.kernels.ops import N_TILE_FIELDS, sched_arrays
 
         def arrs(s):
             a = sched_arrays(s)
-            return a if with_edges else a[:5] + (None, None, None)
+            return (a if with_edges
+                    else a[:N_TILE_FIELDS]
+                    + (None,) * (len(a) - N_TILE_FIELDS))
 
         sb = self.sched_bwd()
         return (arrs(self.sched()), None if sb is None else arrs(sb))
 
     def jit_statics(self) -> tuple:
         """Hashable static half of the convention: ``(fwd_statics,
-        bwd_statics_or_None, dt, variant)`` — the jit-cache key part.
-        Feed the (statics, args) pair to `executor_from_args`."""
+        bwd_statics_or_None, dt, variant, feat_dtype)`` — the jit-cache
+        key part.  ``feat_dtype`` is part of the key because the compiled
+        executable's operand dtypes and the kernel's dim-tile geometry
+        both depend on it.  Feed the (statics, args) pair to
+        `executor_from_args`."""
         from repro.kernels.ops import sched_statics
         sb = self.sched_bwd()
         return (sched_statics(self.sched()),
                 None if sb is None else sched_statics(sb),
-                self.config.dt, self.config.variant)
+                self.config.dt, self.config.variant,
+                self.config.feat_dtype)
 
     @staticmethod
     def executor_from_args(statics: tuple, args: tuple, *,
@@ -154,11 +160,12 @@ class Plan:
         trainer's per-bucket steps, and the sharded per-device bodies."""
         from repro.core.aggregate import PlanExecutor
         from repro.kernels.ops import SchedView
-        st_f, st_b, dt, variant = statics
+        st_f, st_b, dt, variant, feat_dtype = statics
         a_f, a_b = args
         return PlanExecutor.from_schedule(
             SchedView(a_f, st_f), dt=dt, variant=variant, backend=backend,
-            sched_bwd=None if a_b is None else SchedView(a_b, st_b))
+            sched_bwd=None if a_b is None else SchedView(a_b, st_b),
+            out_dtype=feat_dtype)
 
     # ---------------- sharding ----------------
 
@@ -186,6 +193,8 @@ class Plan:
             data[f"cfg_{k}"] = np.asarray(getattr(self.config, k))
         data["cfg_variant"] = np.frombuffer(
             self.config.variant.encode(), dtype=np.uint8)
+        data["cfg_feat_dtype"] = np.frombuffer(
+            self.config.feat_dtype.encode(), dtype=np.uint8)
         if self.perm is not None:
             data["perm"] = self.perm
         if self.arch is not None:
@@ -226,7 +235,10 @@ class Plan:
                 gs=int(z["cfg_gs"]), gpt=int(z["cfg_gpt"]),
                 dt=int(z["cfg_dt"]), src_win=int(z["cfg_src_win"]),
                 ont=int(z["cfg_ont"]),
-                variant=bytes(z["cfg_variant"]).decode()),
+                variant=bytes(z["cfg_variant"]).decode(),
+                # plans saved before the dtype policy default to f32
+                feat_dtype=(bytes(z["cfg_feat_dtype"]).decode()
+                            if "cfg_feat_dtype" in z else "float32")),
             graph_props=None, arch=arch,
             perm=z["perm"] if "perm" in z else None,
             tuner=None,

@@ -19,14 +19,16 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 from repro.core.extractor import GraphProps, extract_graph_props
-from repro.core.model import AggConfig, KernelModel, config_is_feasible, paper_eq2_latency
+from repro.core.model import (AggConfig, KernelModel, config_infeasibility,
+                              paper_eq2_latency)
 from repro.core.partition import partition_graph, partition_stats
 from repro.graphs.csr import CSRGraph, random_community_graph
+from repro.hw import TPU_V5E, TPUSpec
 
 __all__ = ["TunerResult", "evolve", "tune", "community_profile", "SEARCH_SPACE"]
 
@@ -46,8 +48,11 @@ class TunerResult:
     evaluations: int  # UNIQUE score-fn evaluations (duplicates are memoized)
 
 
-def _random_config(rng: np.random.Generator) -> AggConfig:
-    return AggConfig(
+def _random_config(rng: np.random.Generator,
+                   base: AggConfig = AggConfig()) -> AggConfig:
+    # non-searched fields (ont, variant, feat_dtype) ride along from `base`
+    return dataclasses.replace(
+        base,
         gs=int(rng.choice(SEARCH_SPACE["gs"])),
         gpt=int(rng.choice(SEARCH_SPACE["gpt"])),
         dt=int(rng.choice(SEARCH_SPACE["dt"])),
@@ -57,8 +62,9 @@ def _random_config(rng: np.random.Generator) -> AggConfig:
 
 def _crossover(a: AggConfig, b: AggConfig, rng: np.random.Generator) -> AggConfig:
     pick = lambda x, y: x if rng.random() < 0.5 else y
-    return AggConfig(gs=pick(a.gs, b.gs), gpt=pick(a.gpt, b.gpt),
-                     dt=pick(a.dt, b.dt), src_win=pick(a.src_win, b.src_win))
+    return dataclasses.replace(
+        a, gs=pick(a.gs, b.gs), gpt=pick(a.gpt, b.gpt),
+        dt=pick(a.dt, b.dt), src_win=pick(a.src_win, b.src_win))
 
 
 def _mutate(c: AggConfig, rng: np.random.Generator, p: float = 0.25) -> AggConfig:
@@ -73,20 +79,53 @@ def _mutate(c: AggConfig, rng: np.random.Generator, p: float = 0.25) -> AggConfi
 
 
 def evolve(score_fn: Callable[[AggConfig], float], *, pop: int = 16,
-           iters: int = 12, elite: int = 4, seed: int = 0) -> TunerResult:
+           iters: int = 12, elite: int = 4, seed: int = 0,
+           base: AggConfig = AggConfig(),
+           infeasibility_fn: Optional[
+               Callable[[AggConfig], Optional[str]]] = None,
+           max_attempts_per_member: int = 64) -> TunerResult:
     """Generic evolutionary loop (lower score = better).
 
     Duplicate configs are never re-scored: crossover of a small elite
     re-produces identical `AggConfig`s constantly, and profile-mode score
     functions build REAL partitions per call — a seen-map turns those
     repeats into dict hits.  ``TunerResult.evaluations`` therefore counts
-    UNIQUE score-function evaluations (the tuner's true cost)."""
+    UNIQUE score-function evaluations (the tuner's true cost).
+
+    ``base`` seeds the non-searched config fields (ont, variant,
+    feat_dtype); ``infeasibility_fn`` (reason string or None = feasible)
+    overrides the default `config_infeasibility` — e.g. one bound to a
+    small-VMEM `TPUSpec` or a bf16-tightened Eq. 4.  Rejection sampling is
+    BOUNDED: a sparse-but-nonempty feasible region proceeds with the
+    partial population it found; a fully infeasible space raises a
+    `RuntimeError` naming the violated constraints instead of spinning
+    forever."""
     rng = np.random.default_rng(seed)
+    if infeasibility_fn is None:
+        infeasibility_fn = config_infeasibility
+    feasible_fn = lambda c: infeasibility_fn(c) is None
     population = []
+    attempts, reasons = 0, []
+    budget = max_attempts_per_member * pop
     while len(population) < pop:
-        c = _random_config(rng)
-        if config_is_feasible(c):
+        if attempts >= budget:
+            if population:
+                # sparse feasible region: run with what we found rather
+                # than abort (the elites will breed inside it)
+                break
+            uniq = list(dict.fromkeys(reasons[-16:]))
+            raise RuntimeError(
+                f"tuner search space is infeasible: {attempts} rejection-"
+                f"sampling attempts produced {len(population)}/{pop} "
+                f"feasible configs (feat_dtype={base.feat_dtype}).  "
+                f"Sample rejection reasons: {uniq}")
+        c = _random_config(rng, base)
+        attempts += 1
+        reason = infeasibility_fn(c)
+        if reason is None:
             population.append(c)
+        else:
+            reasons.append(reason)
     seen: dict[AggConfig, float] = {}
 
     def score(c: AggConfig) -> float:
@@ -102,10 +141,17 @@ def evolve(score_fn: Callable[[AggConfig], float], *, pop: int = 16,
         history.append((it, scored[0][0]))
         keep = [c for _, c in scored[:elite]]
         children = []
-        while len(children) < pop - elite:
+        child_attempts = 0
+        # the elites are feasible, so feasible children are normally easy to
+        # produce — but a tight feasibility surface (bf16 Eq. 4 on a small
+        # part) can make mutation near-always-reject; bound the attempts and
+        # continue with a smaller brood rather than spin
+        while (len(children) < pop - elite
+               and child_attempts < max_attempts_per_member * pop):
             a, b = rng.choice(len(keep), 2, replace=True)
             child = _mutate(_crossover(keep[a], keep[b], rng), rng)
-            if config_is_feasible(child):
+            child_attempts += 1
+            if feasible_fn(child):
                 children.append(child)
         scored = scored[:elite] + [(score(c), c) for c in children]
     scored.sort(key=lambda x: x[0])
@@ -146,15 +192,24 @@ def community_profile(community_sizes: Sequence[int], dim: int, *,
 
 def tune(g: CSRGraph, dim: int, *, props: GraphProps | None = None,
          mode: str = "model", iters: int = 12, pop: int = 16,
-         seed: int = 0) -> TunerResult:
+         seed: int = 0, feat_dtype: str = "float32",
+         hw: TPUSpec = TPU_V5E) -> TunerResult:
     """Pick (gs, gpt, dt, src_win) for a given graph and embedding dim.
 
     mode="model":   white-box model over predicted tile counts (fast; §7.1).
     mode="profile": score by building real partitions (exact tiles; §7.2).
     mode="paper":   literal Eq. 2 surrogate (fidelity baseline).
+
+    ``feat_dtype`` is the feature/activation dtype policy: every candidate
+    is stamped with it, the kernel model prices its ``bytes_feat`` honestly
+    (a bf16 feature window moves half the DMA bytes, so wider ``src_win``/
+    ``dt`` become profitable), and feasibility uses the dtype-tightened
+    Eq. 4 + alignment constraints — the returned ``best`` therefore passes
+    ``config_is_feasible`` under its own dtype.
     """
     pr = props or extract_graph_props(g, detect_communities=False)
-    km = KernelModel()
+    km = KernelModel(hw=hw)
+    base = AggConfig(feat_dtype=feat_dtype)
     if mode == "model":
         score = lambda c: km.latency(pr, dim, c)
     elif mode == "profile":
@@ -165,4 +220,5 @@ def tune(g: CSRGraph, dim: int, *, props: GraphProps | None = None,
         score = lambda c: paper_eq2_latency(pr, dim, c)
     else:
         raise ValueError(mode)
-    return evolve(score, pop=pop, iters=iters, seed=seed)
+    return evolve(score, pop=pop, iters=iters, seed=seed, base=base,
+                  infeasibility_fn=lambda c: config_infeasibility(c, hw=hw))

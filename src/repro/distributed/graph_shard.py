@@ -35,7 +35,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.plan import Plan
 from repro.core.shard import PlanShards
-from repro.kernels.ops import _SCHED_ARRAY_FIELDS
+from repro.kernels.ops import _SCHED_ARRAY_FIELDS, N_TILE_FIELDS
 
 __all__ = ["SHARD_AXIS", "ShardedExecutor", "local_step_value_and_grad",
            "make_sharded_logits_fn", "make_sharded_train_step", "shard_mesh",
@@ -43,9 +43,10 @@ __all__ = ["SHARD_AXIS", "ShardedExecutor", "local_step_value_and_grad",
 
 SHARD_AXIS = "shard"
 
-# the tile-tensor members of the jit-argument layout (the (E,)-sized edge
-# members are stacked separately — see _stack_dir)
-_TILE_FIELDS = _SCHED_ARRAY_FIELDS[:5]
+# the tile-tensor members of the jit-argument layout, incl. the
+# schedule-static block_visited mask (the (E,)-sized edge members are
+# stacked separately — see _stack_dir)
+_TILE_FIELDS = _SCHED_ARRAY_FIELDS[:N_TILE_FIELDS]
 
 
 def shard_mesh(num_shards: int) -> Mesh:
@@ -65,10 +66,10 @@ def _stack_dir(scheds, *, with_edges: bool) -> tuple:
     uniform (`shard_plan` pads); the (E_p,)-sized edge members are padded
     to the max edge count — padded ``edge_slot`` entries point one past
     the flat group range, so their scatter updates are dropped."""
-    first5 = tuple(jnp.stack([getattr(s, f) for s in scheds])
-                   for f in _TILE_FIELDS)
+    tiles = tuple(jnp.stack([getattr(s, f) for s in scheds])
+                  for f in _TILE_FIELDS)
     if not with_edges:
-        return first5 + (None, None, None)
+        return tiles + (None, None, None)
     oob = scheds[0].nbrs.shape[0] * scheds[0].gpt     # out-of-range slot
     e_max = max(int(s.edge_slot.shape[0]) for s in scheds)
 
@@ -82,8 +83,8 @@ def _stack_dir(scheds, *, with_edges: bool) -> tuple:
                                 constant_values=fill))
         return jnp.stack(cols)
 
-    return first5 + (padded("edge_slot", oob), padded("edge_pos", 0),
-                     padded("edge_perm", 0))
+    return tiles + (padded("edge_slot", oob), padded("edge_pos", 0),
+                    padded("edge_perm", 0))
 
 
 def stack_shard_args(shards: PlanShards, *, with_edges: bool = False):
@@ -157,6 +158,9 @@ class ShardedExecutor:
         self.mesh = mesh if mesh is not None else shard_mesh(
             shards.spec.num_shards)
         self.statics = shards.plans[0].jit_statics()
+        # the parent plan's dtype policy: features enter the halo exchange
+        # at this dtype (bf16 halves the all-gather bytes)
+        self.feat_dtype = jnp.dtype(shards.plans[0].config.feat_dtype)
         self._args = stack_shard_args(shards, with_edges=False)
         self._args_dyn = None      # built on first aggregate_edges
         self._edge_ids = None
@@ -198,6 +202,7 @@ class ShardedExecutor:
     def _build(self, *, dynamic: bool):
         spec, statics, backend = self.spec, self.statics, self.backend
         n, n_pad, n_local = spec.num_nodes, spec.padded_nodes, spec.n_local
+        cdt = self.feat_dtype
 
         def local_fn(feat_l, ev_l, arrs_f, arrs_b):
             full = jax.lax.all_gather(feat_l, SHARD_AXIS, axis=0, tiled=True)
@@ -216,14 +221,14 @@ class ShardedExecutor:
         if not dynamic:
             @jax.jit
             def fwd(feat, args_f, args_b):
-                feat = jnp.pad(feat.astype(jnp.float32),
+                feat = jnp.pad(feat.astype(cdt),
                                ((0, n_pad - feat.shape[0]), (0, 0)))
                 return sm(feat, None, args_f, args_b)[:n]
             return fwd
 
         @jax.jit
         def dyn(feat, ev, ids, msk, args_f, args_b):
-            feat = jnp.pad(feat.astype(jnp.float32),
+            feat = jnp.pad(feat.astype(cdt),
                            ((0, n_pad - feat.shape[0]), (0, 0)))
             ev_stack = ev.astype(jnp.float32)[ids] * msk      # (P, E_max)
             return sm(feat, ev_stack, args_f, args_b)[:n]
@@ -261,7 +266,7 @@ def make_sharded_logits_fn(cfg, shards: PlanShards, *,
 
     @jax.jit
     def logits(params, feat, args_f, args_b):
-        feat = jnp.pad(feat.astype(jnp.float32),
+        feat = jnp.pad(feat.astype(cfg.compute_dtype),
                        ((0, n_pad - feat.shape[0]), (0, 0)))
         return sm(params, feat, args_f, args_b)[:n]
 
@@ -298,7 +303,7 @@ def make_sharded_train_step(cfg, shards: PlanShards, opt, *,
 
     def step(state, feat, labels, mask, args_f, args_b):
         params, opt_state = state
-        feat = jnp.pad(feat.astype(jnp.float32),
+        feat = jnp.pad(feat.astype(cfg.compute_dtype),
                        ((0, n_pad - feat.shape[0]), (0, 0)))
         labels = jnp.pad(labels.astype(jnp.int32), (0, n_pad - labels.shape[0]))
         mask = jnp.pad(mask.astype(jnp.float32), (0, n_pad - mask.shape[0]))

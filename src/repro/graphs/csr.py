@@ -72,6 +72,18 @@ class CSRGraph:
         new_indices[np.arange(self.num_edges) + rows + 1] = self.indices
         return CSRGraph(new_indptr, new_indices)
 
+    def _permute_edge_order(self, perm: np.ndarray):
+        """``(order, new_cols)`` induced by `permute(perm)`: position i of
+        the permuted graph's edge array holds this graph's edge
+        ``order[i]`` (whose relabelled neighbor is ``new_cols[order[i]]``).
+        The single source of truth for how edge-aligned arrays travel
+        through a node relabelling (used by both `permute` and
+        `permute_edge_vals` — keep them in lockstep)."""
+        assert perm.shape == (self.num_nodes,)
+        new_rows = np.repeat(perm, self.degrees)
+        new_cols = perm[self.indices]
+        return np.lexsort((new_cols, new_rows)), new_cols
+
     def permute(self, perm: np.ndarray) -> "CSRGraph":
         """Relabel nodes: new id of old node v is perm[v].
 
@@ -80,15 +92,20 @@ class CSRGraph:
         which maximizes gather locality inside a group.
         """
         n = self.num_nodes
-        assert perm.shape == (n,)
-        new_rows = np.repeat(perm, self.degrees)
-        new_cols = perm[self.indices]
-        order = np.lexsort((new_cols, new_rows))
+        order, new_cols = self._permute_edge_order(perm)
         new_degs = np.zeros(n, dtype=np.int64)
         new_degs[perm] = self.degrees
         new_indptr = np.zeros(n + 1, dtype=np.int64)
         new_indptr[1:] = np.cumsum(new_degs)
         return CSRGraph(new_indptr, new_cols[order].astype(np.int32))
+
+    def permute_edge_vals(self, perm: np.ndarray,
+                          edge_vals: np.ndarray) -> np.ndarray:
+        """Carry per-edge values (aligned with ``self.indices``) through
+        `permute`'s exact edge order: returns the array aligned with
+        ``self.permute(perm).indices``."""
+        order, _ = self._permute_edge_order(perm)
+        return np.asarray(edge_vals, dtype=np.float32)[order]
 
     def to_coo(self) -> tuple[np.ndarray, np.ndarray]:
         rows = np.repeat(np.arange(self.num_nodes, dtype=np.int32), self.degrees)

@@ -31,6 +31,28 @@ w.r.t. ``edge_values``).  The custom VJP applies to EVERY backend once
 transposed schedule through the reference lowering (numerically equivalent
 to native AD).  Without ``sched_bwd``, the XLA backend differentiates
 natively and the Pallas backends are forward-only (``jax.grad`` raises).
+
+Dtype rules
+-----------
+``feat`` may be any float dtype (float32, bfloat16, float16); the dtype of
+the feature operand is the dtype the kernel's window DMAs move, so a bf16
+``feat`` halves the dominant memory-bound term.  Accumulation is ALWAYS
+float32 regardless of input dtype: every matmul inside the kernels (and
+the XLA references) runs with ``preferred_element_type=float32``, so group
+sums never accumulate in reduced precision.
+
+``out_dtype`` selects the dtype of the RESULT, applied as the final cast
+after f32 accumulation.  ``None`` (the default) means float32 — the
+historical contract.  The end-to-end bf16 policy passes the feature dtype
+here so activations stay bf16 between layers (`AggConfig.feat_dtype`,
+threaded through `Plan.jit_statics` / `PlanExecutor`).
+
+Backward: the output cotangent is cast to the FORWARD feature dtype before
+the transposed-schedule launch (the backward window DMAs enjoy the same
+bf16 halving), accumulated in f32, and the returned cotangents match the
+primals' dtypes (``feat.dtype`` and ``edge_values.dtype``).  Static edge
+values stay float32 inside schedules; dynamic edge values keep their own
+dtype through `_scatter_edge_values`.
 """
 from __future__ import annotations
 
@@ -50,10 +72,37 @@ from repro.kernels.group_aggregate import (group_aggregate_pallas,
 if TYPE_CHECKING:                      # avoid core<->kernels import cycle
     from repro.core.partition import GroupPartition
 
-__all__ = ["aggregate", "DeviceSchedule", "schedule_to_device",
-           "SchedView", "sched_arrays", "sched_statics", "sched_statics_for"]
+__all__ = ["aggregate", "DeviceSchedule", "dim_tile", "schedule_to_device",
+           "SchedView", "sched_arrays", "sched_static", "sched_statics",
+           "sched_statics_for"]
 
 Backend = Literal["pallas", "pallas_interpret", "xla"]
+
+
+def dim_tile(dt: int, d: int, dtype) -> int:
+    """Effective dim-tile width for a D-wide feature operand.
+
+    The kernel pads D up to a multiple of the tile and launches D/dt_eff
+    dim steps, so the tile must divide a lane-aligned padded width: round D
+    up to the dtype's lane-tile unit (8 rows for 32-bit, 16 for 16-bit —
+    the vreg second-minor packing) BEFORE clamping ``dt`` to it.  Clamping
+    to the raw D (the old behavior) produced unaligned tiles for any D not
+    a multiple of 8 (e.g. D=100 -> dt_eff=100), which `config_is_feasible`
+    forbids and only the interpreter tolerates.
+    """
+    # policy dtypes take their alignment from the model layer's single
+    # source of truth (what config_infeasibility enforces); dtypes outside
+    # the policy vocabulary (f64 under x64) fall back to the packing rule:
+    # 8 rows for 32-bit-and-wider, 16 for 16-bit
+    dtype = np.dtype(dtype)
+    try:
+        from repro.core.model import feat_dtype_align
+        unit = feat_dtype_align(dtype.name)
+    except ValueError:
+        unit = max(8, 8 * 4 // max(dtype.itemsize, 1))
+    dt_aligned = -(-max(dt, 1) // unit) * unit
+    d_aligned = -(-max(d, 1) // unit) * unit
+    return min(dt_aligned, max(unit, d_aligned))
 
 
 class DeviceSchedule:
@@ -61,9 +110,12 @@ class DeviceSchedule:
 
     Array members (T = tiles): ``nbrs``/``edge_val`` (T, gpt, gs),
     ``local_node`` (T, gpt), ``tile_node_block``/``tile_window`` (T,),
-    ``edge_slot``/``edge_pos`` (E,).  Static ints mirror the partition's
-    config (`gs`, `gpt`, `ont`, `src_win`) and padding geometry
-    (`padded_src_rows`, `padded_out_rows`).
+    ``block_visited`` (padded_out_rows/ont,) bool — the schedule-static
+    unvisited-output-block mask, precomputed host-side so jitted calls do
+    not rebuild it from ``tile_node_block`` — and ``edge_slot``/
+    ``edge_pos`` (E,).  Static ints mirror the partition's config (`gs`,
+    `gpt`, `ont`, `src_win`) and padding geometry (`padded_src_rows`,
+    `padded_out_rows`).
 
     When a schedule is built from a TRANSPOSED partition to serve as a
     backward schedule, ``edge_perm`` maps its CSR edge order back to the
@@ -78,6 +130,7 @@ class DeviceSchedule:
         self.local_node = jnp.asarray(p.local_node)
         self.tile_node_block = jnp.asarray(p.tile_node_block)
         self.tile_window = jnp.asarray(p.tile_window)
+        self.block_visited = jnp.asarray(p.block_visited())
         self.edge_slot = jnp.asarray(p.edge_slot)
         self.edge_pos = jnp.asarray(p.edge_pos)
         self.edge_perm = None if edge_perm is None else jnp.asarray(edge_perm)
@@ -107,7 +160,12 @@ def schedule_to_device(p: "GroupPartition") -> DeviceSchedule:
 # call sites over using these helpers directly.
 
 _SCHED_ARRAY_FIELDS = ("nbrs", "edge_val", "local_node", "tile_node_block",
-                       "tile_window", "edge_slot", "edge_pos", "edge_perm")
+                       "tile_window", "block_visited",
+                       "edge_slot", "edge_pos", "edge_perm")
+# the first N fields are tile-shaped (uniform after tile padding) — the
+# (E,)-sized edge members sit after this split point so callers can drop
+# or pad them independently (Plan.jit_args, graph_shard stacking)
+N_TILE_FIELDS = 6
 # num_edges deliberately NOT part of the static signature: raw edge counts
 # are unbucketed and nothing in the compute path reads them — including
 # them would defeat shape bucketing (one retrace per distinct edge count).
@@ -123,6 +181,13 @@ def sched_arrays(s) -> tuple:
 def sched_statics(s) -> tuple:
     """The schedule's static ints as a hashable tuple."""
     return tuple(int(getattr(s, f)) for f in _SCHED_STATIC_FIELDS)
+
+
+def sched_static(statics: tuple, field: str) -> int:
+    """Read one field of a `sched_statics` tuple BY NAME — callers that
+    hold only the tuple (host-side uniformization in the sharded sampled
+    trainer) stay correct if `_SCHED_STATIC_FIELDS` is ever reordered."""
+    return statics[_SCHED_STATIC_FIELDS.index(field)]
 
 
 def sched_statics_for(*, gs: int, gpt: int, ont: int, src_win: int,
@@ -172,21 +237,45 @@ def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
 
 def _scatter_edge_values(sched: DeviceSchedule,
                          edge_values: jax.Array) -> jax.Array:
-    """Lay per-edge values (original CSR order) out in schedule layout."""
+    """Lay per-edge values (original CSR order) out in schedule layout.
+
+    The scatter buffer keeps the edge values' own (float) dtype — under the
+    bf16 policy a bf16 edge-value tensor stays bf16 through the layout
+    transform; the kernels up-cast to f32 at the accumulating matmul."""
     T, gpt, gs = sched.edge_val.shape
-    return jnp.zeros((T * gpt, gs), jnp.float32).at[
+    ev_dtype = (edge_values.dtype
+                if jnp.issubdtype(edge_values.dtype, jnp.floating)
+                else jnp.float32)
+    return jnp.zeros((T * gpt, gs), ev_dtype).at[
         sched.edge_slot, sched.edge_pos].set(
-        edge_values.astype(jnp.float32)).reshape(T, gpt, gs)
+        edge_values.astype(ev_dtype)).reshape(T, gpt, gs)
+
+
+def _visited_rows(sched) -> jax.Array:
+    """(padded_out_rows,) bool row mask from the schedule-static
+    block-visited mask (precomputed by `DeviceSchedule`; duck-typed views
+    without one fall back to rebuilding it from ``tile_node_block``)."""
+    visited = getattr(sched, "block_visited", None)
+    if visited is None:
+        nblk = sched.padded_out_rows // sched.ont
+        visited = jnp.zeros((nblk,), jnp.bool_).at[
+            sched.tile_node_block].set(True)
+    return jnp.repeat(visited, sched.ont)
 
 
 def _aggregate_impl(feat: jax.Array, sched: DeviceSchedule, *,
                     dt: int, backend: Backend, variant: str,
-                    edge_values: Optional[jax.Array] = None) -> jax.Array:
-    """Forward-only aggregation (no AD rule on the Pallas paths)."""
+                    edge_values: Optional[jax.Array] = None,
+                    out_dtype=None) -> jax.Array:
+    """Forward-only aggregation (no AD rule on the Pallas paths).
+
+    Accumulates in f32; the result is cast to ``out_dtype`` (None =
+    float32) as the final step — see the module docstring's dtype rules."""
     n, d = feat.shape
+    out_dtype = jnp.float32 if out_dtype is None else out_dtype
     assert n == sched.num_nodes, (n, sched.num_nodes)
     if sched.num_tiles == 0:
-        return jnp.zeros((n, d), jnp.float32)
+        return jnp.zeros((n, d), out_dtype)
     if edge_values is not None:
         ev = _scatter_edge_values(sched, edge_values)
     else:
@@ -197,8 +286,8 @@ def _aggregate_impl(feat: jax.Array, sched: DeviceSchedule, *,
             sched.nbrs, ev, sched.local_node,
             sched.tile_node_block, sched.ont, sched.padded_out_rows,
         )
-        return out[:n]
-    dt_eff = min(dt, max(8, d))
+        return out[:n].astype(out_dtype)
+    dt_eff = dim_tile(dt, d, feat.dtype)
     d_pad = -(-d // dt_eff) * dt_eff
     feat_p = _pad_to(feat, sched.padded_src_rows, d_pad)
     out = group_aggregate_pallas(
@@ -212,11 +301,9 @@ def _aggregate_impl(feat: jax.Array, sched: DeviceSchedule, *,
     # flush), so node blocks no tile names are never written and the
     # out_shape buffer is undefined there.  Full graphs visit every block;
     # bipartite sampled blocks (edge-less rows past num_dst) do not — mask
-    # unvisited blocks to true zeros.
-    nblk = sched.padded_out_rows // sched.ont
-    visited = jnp.zeros((nblk,), jnp.bool_).at[sched.tile_node_block].set(True)
-    return jnp.where(jnp.repeat(visited, sched.ont)[:n, None],
-                     out[:n, :d], 0.0)
+    # unvisited blocks to true zeros (schedule-static mask, precomputed).
+    return jnp.where(_visited_rows(sched)[:n, None],
+                     out[:n, :d], 0.0).astype(out_dtype)
 
 
 def _edge_cotangent(g_out: jax.Array, feat: jax.Array,
@@ -232,7 +319,7 @@ def _edge_cotangent(g_out: jax.Array, feat: jax.Array,
             _pad_to(feat, sched.padded_src_rows, d),
             sched.nbrs, sched.local_node, sched.tile_node_block, sched.ont)
     else:
-        dt_eff = min(dt, max(8, d))
+        dt_eff = dim_tile(dt, d, feat.dtype)
         d_pad = -(-d // dt_eff) * dt_eff
         per_slot = group_edge_grad_pallas(
             _pad_to(g_out, sched.padded_out_rows, d_pad),
@@ -253,33 +340,37 @@ def _edge_cotangent(g_out: jax.Array, feat: jax.Array,
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
 def _aggregate_diff(statics, statics_bwd, opts, feat, edge_values, arrs,
                     arrs_bwd):
-    dt, backend, variant = opts
+    dt, backend, variant, out_dtype = opts
     return _aggregate_impl(feat, SchedView(arrs, statics), dt=dt,
                            backend=backend, variant=variant,
-                           edge_values=edge_values)
+                           edge_values=edge_values,
+                           out_dtype=jnp.dtype(out_dtype))
 
 
 def _aggregate_diff_fwd(statics, statics_bwd, opts, feat, edge_values, arrs,
                         arrs_bwd):
-    dt, backend, variant = opts
+    dt, backend, variant, out_dtype = opts
     out = _aggregate_impl(feat, SchedView(arrs, statics), dt=dt,
                           backend=backend, variant=variant,
-                          edge_values=edge_values)
+                          edge_values=edge_values,
+                          out_dtype=jnp.dtype(out_dtype))
     return out, (feat, edge_values, arrs, arrs_bwd)
 
 
 def _aggregate_diff_bwd(statics, statics_bwd, opts, res, g_out):
     feat, edge_values, arrs, arrs_bwd = res
-    dt, backend, variant = opts
+    dt, backend, variant, _ = opts
     sched = SchedView(arrs, statics)
     sched_bwd = SchedView(arrs_bwd, statics_bwd)
-    g_out = g_out.astype(jnp.float32)
+    # run the backward aggregation in the FORWARD feature dtype (bf16
+    # cotangents move bf16 window bytes); accumulation stays f32 inside
+    g_out = g_out.astype(feat.dtype)
     if edge_values is None:
         ev_bwd = None            # sched_bwd.edge_val holds the transposed vals
         ev_bar = None
     else:
         ev_bwd = edge_values[sched_bwd.edge_perm]
-        ev_bar = _edge_cotangent(g_out, feat.astype(jnp.float32), sched,
+        ev_bar = _edge_cotangent(g_out, feat, sched,
                                  dt=dt, backend=backend
                                  ).astype(edge_values.dtype)
     feat_bar = _aggregate_impl(g_out, sched_bwd, dt=dt, backend=backend,
@@ -295,11 +386,15 @@ def aggregate(feat: jax.Array, sched: DeviceSchedule, *,
               dt: int = 128, backend: Backend = "pallas_interpret",
               variant: str = "folded",
               edge_values: Optional[jax.Array] = None,
-              sched_bwd: Optional[DeviceSchedule] = None) -> jax.Array:
+              sched_bwd: Optional[DeviceSchedule] = None,
+              out_dtype=None) -> jax.Array:
     """out[v] = sum over v's neighbor groups of edge_val * feat[nbr].
 
     feat: (N, D) node features in the schedule's node order, any float
-    dtype (accumulation is always float32).  Returns (num_nodes, D) float32.
+    dtype (accumulation is always float32).  Returns (num_nodes, D) in
+    ``out_dtype`` (None = float32 — see the module docstring's dtype
+    rules; the bf16 policy passes the feature dtype to keep activations
+    16-bit between layers).
 
     edge_values: optional (E,) per-edge weights in ORIGINAL CSR edge order,
     overriding the schedule's static values — the dynamic-edge-value path
@@ -313,11 +408,15 @@ def aggregate(feat: jax.Array, sched: DeviceSchedule, *,
     """
     if sched_bwd is None:
         return _aggregate_impl(feat, sched, dt=dt, backend=backend,
-                               variant=variant, edge_values=edge_values)
+                               variant=variant, edge_values=edge_values,
+                               out_dtype=out_dtype)
     if edge_values is not None and sched_bwd.edge_perm is None:
         raise ValueError(
             "dynamic edge_values need a backward schedule with edge_perm "
             "(build it via transpose_graph / plan_for(with_backward=True))")
+    # out_dtype rides in nondiff opts as a canonical NAME (hashable)
+    out_name = jnp.dtype(jnp.float32 if out_dtype is None else out_dtype).name
     return _aggregate_diff(sched_statics(sched), sched_statics(sched_bwd),
-                           (dt, backend, variant), feat, edge_values,
+                           (dt, backend, variant, out_name), feat,
+                           edge_values,
                            sched_arrays(sched), sched_arrays(sched_bwd))

@@ -46,6 +46,10 @@ def main(argv=None) -> int:
                    help="ego radius (default: --layers)")
     p.add_argument("--backend", default="xla",
                    choices=["xla", "pallas", "pallas_interpret"])
+    p.add_argument("--dtype", default="float32",
+                   choices=["float32", "bfloat16"],
+                   help="feature/activation dtype policy "
+                        "(docs/performance.md)")
     p.add_argument("--batch-mode", default="union",
                    choices=["union", "disjoint"])
     p.add_argument("--zipf", type=float, default=1.1)
@@ -75,7 +79,8 @@ def main(argv=None) -> int:
     feat = rng.standard_normal((g.num_nodes, args.in_dim)).astype(np.float32)
     cfg = GNNConfig(arch=args.arch, in_dim=args.in_dim,
                     hidden_dim=args.hidden_dim, num_classes=args.classes,
-                    num_layers=args.layers, backend=args.backend)
+                    num_layers=args.layers, backend=args.backend,
+                    feat_dtype=args.dtype)
     engine = ServingEngine(
         g, feat, cfg,
         serving=ServingConfig(hops=args.hops, max_batch=args.batch_window,
@@ -115,9 +120,12 @@ def main(argv=None) -> int:
             # f32 accumulation-order noise scales with |logit|
             err = max(err, float((np.abs(single - reqs[i].result)
                                   / (1.0 + np.abs(single))).max()))
-        ok = err <= 1e-5
+        # bf16 activations round per layer, so two paddings of the same ego
+        # can differ by a few ulps (~1e-2 relative); f32 stays at 1e-5
+        tol = 1e-5 if args.dtype == "float32" else 2e-2
+        ok = err <= tol
         print(f"[serve_gnn] verify: max|batched - single|/(1+|single|) = "
-              f"{err:.2e} ({'OK' if ok else 'FAIL'} <= 1e-5)")
+              f"{err:.2e} ({'OK' if ok else 'FAIL'} <= {tol:g})")
     if c["hit_rate"] <= 0:
         print("[serve_gnn] WARNING: plan-cache hit rate is 0")
         # a short/diverse trace can legitimately never repeat a shape class;

@@ -85,7 +85,7 @@ def _main_gnn_sampled(args) -> int:
     cfg = GNNConfig(arch=args.arch, in_dim=in_dim,
                     hidden_dim=args.hidden_dim,
                     num_classes=spec.num_classes, num_layers=len(fanouts),
-                    backend=args.backend)
+                    backend=args.backend, feat_dtype=args.dtype)
     # no full-graph teacher forward here — that is the very pass sampling
     # exists to avoid on full-size Type III inputs
     labels = structural_labels(g, cfg.num_classes)
@@ -125,7 +125,8 @@ def _main_gnn_sampled(args) -> int:
     losses = (f"first_loss={hist[0]['loss']:.4f} "
               f"last_loss={hist[-1]['loss']:.4f} " if hist else "")
     cache = loader.stats()["cache"]
-    print(f"[train] arch={args.arch} backend={args.backend} sampled "
+    print(f"[train] arch={args.arch} backend={args.backend} "
+          f"dtype={args.dtype} sampled "
           f"fanouts={fanouts} batch={args.batch_nodes} "
           f"shards={args.shards} steps={len(hist)} "
           f"{losses}avg_step={trainer.avg_step_time()*1e3:.1f}ms "
@@ -156,7 +157,7 @@ def _main_gnn(args) -> int:
     cfg = GNNConfig(arch=args.arch, in_dim=in_dim,
                     hidden_dim=args.hidden_dim,
                     num_classes=spec.num_classes, num_layers=2,
-                    backend=args.backend)
+                    backend=args.backend, feat_dtype=args.dtype)
     # learnable planted task: labels from a frozen random teacher
     labels = planted_labels(g, cfg, feat, seed=args.seed + 7)
 
@@ -199,6 +200,7 @@ def _main_gnn(args) -> int:
     losses = (f"first_loss={hist[0]['loss']:.4f} "
               f"last_loss={hist[-1]['loss']:.4f} " if hist else "")
     print(f"[train] arch={args.arch} backend={args.backend} "
+          f"dtype={args.dtype} "
           f"dataset={args.dataset} shards={args.shards} steps={len(hist)} "
           f"{losses}avg_step={trainer.avg_step_time()*1e3:.1f}ms "
           f"wall={time.time()-t0:.1f}s")
@@ -211,6 +213,11 @@ def main(argv=None) -> int:
     p.add_argument("--backend", default="xla",
                    choices=["xla", "pallas", "pallas_interpret"],
                    help="aggregation backend (GNN archs only)")
+    p.add_argument("--dtype", default="float32",
+                   choices=["float32", "bfloat16"],
+                   help="feature/activation dtype policy (GNN archs; "
+                        "params and accumulation stay f32 — "
+                        "docs/performance.md)")
     p.add_argument("--dataset", default="cora",
                    help="paper-dataset replica (GNN archs only)")
     p.add_argument("--max-nodes", type=int, default=None,

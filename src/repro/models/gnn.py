@@ -50,6 +50,23 @@ class GNNConfig:
     gin_eps: float = 0.0
     gat_slope: float = 0.2      # LeakyReLU slope for attention logits
     backend: str = "xla"        # "xla" | "pallas" | "pallas_interpret"
+    # feature/activation dtype policy: "float32" | "bfloat16".  Parameters
+    # and loss stay float32 (mixed precision with an f32 master copy);
+    # matmuls and the aggregation kernel run on feat_dtype operands with
+    # f32 accumulation, and logits are cast back to f32 before the loss.
+    feat_dtype: str = "float32"
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.feat_dtype)
+
+
+def _mmul(a: jax.Array, b: jax.Array, cdt) -> jax.Array:
+    """Policy matmul: operands at the compute dtype, accumulation ALWAYS
+    f32 (`preferred_element_type`), result cast back to the compute dtype
+    so activations stay 16-bit between layers.  A no-op chain for f32."""
+    return jnp.dot(a.astype(cdt), b.astype(cdt),
+                   preferred_element_type=jnp.float32).astype(cdt)
 
 
 def gcn_edge_values(g: CSRGraph) -> tuple[CSRGraph, np.ndarray]:
@@ -70,21 +87,25 @@ class GNNModel:
     params: Pytree
 
     def logits(self, params: Pytree, feat: jax.Array) -> jax.Array:
-        """feat (N, in_dim) in the plan's node order -> (N, num_classes)."""
+        """feat (N, in_dim) in the plan's node order -> (N, num_classes)
+        float32 (intermediate activations follow ``cfg.feat_dtype``)."""
         cfg = self.cfg
+        cdt = cfg.compute_dtype
         x = feat
         for i in range(cfg.num_layers):
             w = params[f"w{i}"]
             if cfg.arch == "gcn":
                 # type-1: reduce dim first, aggregate the projected features
-                x = self.executor(x.astype(jnp.float32) @ w)
+                x = self.executor(_mmul(x, w, cdt))
             elif cfg.arch == "gat":
                 # GAT-lite (single head): type-2 aggregation with DYNAMIC
                 # per-edge values flowing through the same group schedule
                 # (paper §4.2: "edge features applied to each neighbor").
-                z = x.astype(jnp.float32) @ w                  # (N, h)
-                s_src = z @ params[f"a{i}s"]                   # (N,)
-                s_dst = z @ params[f"a{i}d"]
+                # Attention scores stay f32 — exp() of bf16 logits is the
+                # classic softmax-instability trap.
+                z = _mmul(x, w, cdt)                           # (N, h)
+                s_src = z.astype(jnp.float32) @ params[f"a{i}s"]   # (N,)
+                s_dst = z.astype(jnp.float32) @ params[f"a{i}d"]
                 rows, cols = self._edges
                 e = jax.nn.leaky_relu(s_dst[rows] + s_src[cols],
                                       negative_slope=cfg.gat_slope)
@@ -94,18 +115,20 @@ class GNNModel:
                 wgt = jnp.exp(e - emax)
                 num = self.executor.aggregate_edges(z, wgt)
                 den = self.executor.aggregate_edges(
-                    jnp.ones((z.shape[0], 1), jnp.float32), wgt)
-                x = num / jnp.maximum(den, 1e-9)
+                    jnp.ones((z.shape[0], 1), cdt), wgt)
+                x = (num.astype(jnp.float32)
+                     / jnp.maximum(den.astype(jnp.float32), 1e-9))
                 if i < cfg.num_layers - 1:
                     x = jax.nn.elu(x)
             else:
                 # GIN: aggregate full-dim, then (1+eps)*x + agg -> 2-layer MLP
-                agg = self.executor(x.astype(jnp.float32))
-                h = (1.0 + cfg.gin_eps) * x.astype(jnp.float32) + agg
-                x = jax.nn.relu(h @ w) @ params[f"w{i}b"]
+                agg = self.executor(x.astype(cdt))
+                h = (1.0 + cfg.gin_eps) * x.astype(cdt) + agg.astype(cdt)
+                x = _mmul(jax.nn.relu(_mmul(h, w, cdt)),
+                          params[f"w{i}b"], cdt)
             if cfg.arch == "gcn" and i < cfg.num_layers - 1:
                 x = jax.nn.relu(x)
-        return x
+        return x.astype(jnp.float32)
 
     @property
     def _edges(self):
@@ -162,20 +185,21 @@ def gnn_block_logits(cfg: GNNConfig, params: Pytree, feat: jax.Array,
     if cfg.arch not in ("gcn", "gin"):
         raise NotImplementedError(
             f"sampled block forward supports gcn/gin, not {cfg.arch!r}")
+    cdt = cfg.compute_dtype
     x = feat
     for i, ex in enumerate(executors):
         w = params[f"w{i}"]
         if cfg.arch == "gcn":
-            x = ex(x.astype(jnp.float32) @ w)
+            x = ex(_mmul(x, w, cdt))
             if i < cfg.num_layers - 1:
                 x = jax.nn.relu(x)
         else:
-            agg = ex(x.astype(jnp.float32))
-            h = (1.0 + cfg.gin_eps) * x.astype(jnp.float32) + agg
-            x = jax.nn.relu(h @ w) @ params[f"w{i}b"]
+            agg = ex(x.astype(cdt))
+            h = (1.0 + cfg.gin_eps) * x.astype(cdt) + agg.astype(cdt)
+            x = _mmul(jax.nn.relu(_mmul(h, w, cdt)), params[f"w{i}b"], cdt)
         if i + 1 < len(executors):
             x = x[: executors[i + 1].sched.num_nodes]
-    return x
+    return x.astype(jnp.float32)
 
 
 def gnn_block_loss(cfg: GNNConfig, params: Pytree, feat: jax.Array,
@@ -203,23 +227,26 @@ def gnn_sharded_logits(cfg: GNNConfig, params: Pytree, feat_local: jax.Array,
     if cfg.arch not in ("gcn", "gin"):
         raise NotImplementedError(
             f"sharded forward supports gcn/gin, not {cfg.arch!r}")
+    cdt = cfg.compute_dtype
     n_local = feat_local.shape[0]
     x = feat_local
     for i in range(cfg.num_layers):
         w = params[f"w{i}"]
         if cfg.arch == "gcn":
-            z = x.astype(jnp.float32) @ w
+            # project BEFORE the exchange, in the policy dtype — under
+            # bf16 the halo all-gather moves half the inter-device bytes
+            z = _mmul(x, w, cdt)
             z_full = jax.lax.all_gather(z, axis, axis=0, tiled=True)
             x = executor(z_full)[:n_local]
             if i < cfg.num_layers - 1:
                 x = jax.nn.relu(x)
         else:
-            x_full = jax.lax.all_gather(x.astype(jnp.float32), axis,
+            x_full = jax.lax.all_gather(x.astype(cdt), axis,
                                         axis=0, tiled=True)
             agg = executor(x_full)[:n_local]
-            h = (1.0 + cfg.gin_eps) * x.astype(jnp.float32) + agg
-            x = jax.nn.relu(h @ w) @ params[f"w{i}b"]
-    return x
+            h = (1.0 + cfg.gin_eps) * x.astype(cdt) + agg.astype(cdt)
+            x = _mmul(jax.nn.relu(_mmul(h, w, cdt)), params[f"w{i}b"], cdt)
+    return x.astype(jnp.float32)
 
 
 def structural_labels(g: CSRGraph, num_classes: int) -> np.ndarray:
@@ -259,12 +286,14 @@ def build_gnn(g: CSRGraph, cfg: GNNConfig, *, key: Optional[jax.Array] = None,
         plan = advise(g2, arch="gcn", in_dim=cfg.in_dim,
                       hidden_dim=cfg.hidden_dim, num_layers=cfg.num_layers,
                       edge_vals=vals, reorder=reorder, tune_iters=tune_iters,
-                      config=config, seed=seed, with_backward=with_backward)
+                      config=config, seed=seed, with_backward=with_backward,
+                      feat_dtype=cfg.feat_dtype)
     else:
         plan = advise(g, arch=cfg.arch, in_dim=cfg.in_dim,
                       hidden_dim=cfg.hidden_dim, num_layers=cfg.num_layers,
                       reorder=reorder, tune_iters=tune_iters, config=config,
-                      seed=seed, with_backward=with_backward)
+                      seed=seed, with_backward=with_backward,
+                      feat_dtype=cfg.feat_dtype)
     executor = (PlanExecutor(plan, backend=cfg.backend) if with_executor
                 else None)
     params = init_gnn_params(cfg, key)

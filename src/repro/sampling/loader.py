@@ -131,7 +131,8 @@ class SampledLoader:
             tune_iters=loader.tune_iters, max_entries=loader.max_plans,
             bucket_shapes=loader.bucket_shapes, seed=loader.seed,
             with_backward=with_backward,
-            config_fn=None if loader.use_tuner else sampled_agg_config)
+            config_fn=None if loader.use_tuner else sampled_agg_config,
+            feat_dtype=cfg.feat_dtype)
         self.edge_mode = "gcn" if cfg.arch == "gcn" else "scale"
         n = len(self.train_nodes)
         b = min(loader.batch_nodes, n)
@@ -191,7 +192,9 @@ class SampledLoader:
                 else ent.executor.sched_bwd.num_tiles))
         p0 = entries[0].executor.sched.num_nodes
         p_last = entries[-1].executor.sched.num_nodes
-        feat = np.zeros((p0, cfg.in_dim), np.float32)
+        # batch features ship at the policy dtype (bf16 halves the
+        # host->device bytes; numpy handles ml_dtypes' bfloat16 natively)
+        feat = np.zeros((p0, cfg.in_dim), cfg.compute_dtype)
         feat[:len(sb.input_nodes)] = self.feat[sb.input_nodes]
         labels = np.zeros(p_last, np.int32)
         labels[:len(sb.seeds)] = self.labels[sb.seeds]
@@ -200,7 +203,8 @@ class SampledLoader:
         return TrainBatch(
             feat=feat, labels=labels, mask=mask, entries=entries,
             seeds=sb.seeds, num_seeds=len(sb.seeds), step=step,
-            key=(cfg.arch, cfg.backend, p0, tuple(key_parts)),
+            key=(cfg.arch, cfg.backend, cfg.feat_dtype, p0,
+                 tuple(key_parts)),
             raw_nodes=tuple(b.num_src for b in sb.blocks),
             raw_edges=tuple(b.graph.num_edges for b in sb.blocks))
 
@@ -426,7 +430,7 @@ class ShardedSampledTrainStep:
         import jax.numpy as jnp
 
         from repro.core.partition import pad_partition_tiles
-        from repro.kernels.ops import sched_statics_for
+        from repro.kernels.ops import sched_static, sched_statics_for
 
         statics, blocks, layer_shapes = [], [], []
         for l in range(self.cfg.num_layers):
@@ -442,6 +446,7 @@ class ShardedSampledTrainStep:
             parts = [pad_partition_tiles(p.partition, t_f) for p in plans]
             st_f = sched_statics_for(gs=c.gs, gpt=c.gpt, ont=c.ont,
                                      src_win=c.src_win, num_nodes=n_t)
+            nblk = sched_static(st_f, "padded_out_rows") // c.ont
             st_b = None
             arrs_b = None
             if plans[0].partition_bwd is not None:
@@ -449,14 +454,15 @@ class ShardedSampledTrainStep:
                 parts_b = [pad_partition_tiles(p.partition_bwd, t_b)
                            for p in plans]
                 st_b = st_f
-                arrs_b = self._stack_parts(parts_b, jnp)
-            statics.append((st_f, st_b, c.dt, c.variant))
-            blocks.append((self._stack_parts(parts, jnp), arrs_b))
+                arrs_b = self._stack_parts(parts_b, jnp, nblk)
+            statics.append((st_f, st_b, c.dt, c.variant, c.feat_dtype))
+            blocks.append((self._stack_parts(parts, jnp, nblk), arrs_b))
             layer_shapes.append((n_t, t_f,
                                  None if st_b is None else arrs_b[0].shape))
-        n0 = statics[0][0][4]
-        n_last = statics[-1][0][4]
-        feat = np.zeros((len(batches), n0, self.cfg.in_dim), np.float32)
+        n0 = sched_static(statics[0][0], "num_nodes")
+        n_last = sched_static(statics[-1][0], "num_nodes")
+        feat = np.zeros((len(batches), n0, self.cfg.in_dim),
+                        self.cfg.compute_dtype)
         labels = np.zeros((len(batches), n_last), np.int32)
         mask = np.zeros((len(batches), n_last), np.float32)
         for p, b in enumerate(batches):
@@ -471,12 +477,19 @@ class ShardedSampledTrainStep:
                      jnp.asarray(mask), tuple(blocks)), statics
 
     @staticmethod
-    def _stack_parts(parts, jnp) -> tuple:
-        # sched_arrays layout; edge members dropped (see SampledTrainStep)
-        from repro.kernels.ops import _SCHED_ARRAY_FIELDS
+    def _stack_parts(parts, jnp, num_blocks: int) -> tuple:
+        # sched_arrays layout; edge members dropped (see SampledTrainStep).
+        # block_visited is rebuilt at the UNIFORMIZED geometry: the step's
+        # widest node bucket decides the output-row count, so every
+        # partition's mask is widened to `num_blocks` (its own blocks keep
+        # their visited bits; the widening rows are unvisited -> masked).
+        from repro.kernels.ops import _SCHED_ARRAY_FIELDS, N_TILE_FIELDS
+        assert _SCHED_ARRAY_FIELDS[N_TILE_FIELDS - 1] == "block_visited"
         return tuple(
             jnp.stack([np.asarray(getattr(p, f)) for p in parts])
-            for f in _SCHED_ARRAY_FIELDS[:5]) + (None, None, None)
+            for f in _SCHED_ARRAY_FIELDS[:N_TILE_FIELDS - 1]) + (
+            jnp.stack([p.block_visited(num_blocks) for p in parts]),
+        ) + (None,) * (len(_SCHED_ARRAY_FIELDS) - N_TILE_FIELDS)
 
     # -------------- per-bucket executable --------------
 

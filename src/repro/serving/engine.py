@@ -107,7 +107,8 @@ class ServingEngine:
             tune_iters=self.serving.tune_iters,
             max_plans=self.serving.max_plans,
             max_configs=self.serving.max_configs,
-            bucket_shapes=self.serving.bucket_shapes)
+            bucket_shapes=self.serving.bucket_shapes,
+            feat_dtype=cfg.feat_dtype)
         self.batcher = MicroBatcher(
             max_batch=self.serving.max_batch,
             max_wait=(np.inf if self.serving.max_wait is None
@@ -146,8 +147,11 @@ class ServingEngine:
             ent.apply_fn = self._make_apply(ent)
         feat_sub = np.zeros((sub.num_nodes, cfg.in_dim), np.float32)
         feat_sub[:n_real] = self.feat[nodes]
+        # ship features at the policy dtype (bf16 halves the host->device
+        # bytes; the model's casts make this a no-op for float32)
         out = np.asarray(jax.block_until_ready(
-            ent.apply_fn(self.params, jnp.asarray(feat_sub))))
+            ent.apply_fn(self.params,
+                         jnp.asarray(feat_sub, dtype=cfg.compute_dtype))))
         self.stats.batch_sizes.append(len(seeds))
         self.stats.sub_nodes.append(n_real)
         self.stats.compute_s.append(time.perf_counter() - t0)

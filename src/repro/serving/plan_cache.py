@@ -111,10 +111,15 @@ class PlanCache:
                  max_plans: Optional[int] = _UNSET,
                  max_configs: Optional[int] = None,
                  bucket_shapes: bool = True, seed: int = 0,
-                 with_backward: bool = False, config_fn=None):
+                 with_backward: bool = False, config_fn=None,
+                 feat_dtype: str = "float32"):
         self.backend = backend
         self.tune_mode = tune_mode
         self.tune_iters = tune_iters
+        # feat_dtype: the dtype policy every built plan carries — part of
+        # the cache identity (a bf16 plan's statics/executable differ from
+        # the f32 plan of the same subgraph) and of what the tuner prices.
+        self.feat_dtype = feat_dtype
         # not-given falls back to the legacy max_entries knob; an EXPLICIT
         # max_plans=None means unbounded (the ServingConfig contract)
         self.max_plans = max_entries if max_plans is _UNSET else max_plans
@@ -145,7 +150,8 @@ class PlanCache:
     def get_or_build(self, g: CSRGraph, *, arch: str, in_dim: int,
                      hidden_dim: int, num_layers: int,
                      edge_vals: Optional[np.ndarray] = None) -> CacheEntry:
-        arch_key = (arch, in_dim, hidden_dim, num_layers) + (
+        arch_key = (arch, in_dim, hidden_dim, num_layers,
+                    self.feat_dtype) + (
             ("bwd",) if self.with_backward else ())
         key = graph_key(g, edge_vals, arch_key)
         ent = self._plans.get(key)
@@ -164,12 +170,16 @@ class PlanCache:
             self.misses += 1
             if self.config_fn is not None:
                 config = self.config_fn(g)
+                if config.feat_dtype != self.feat_dtype:
+                    config = dataclasses.replace(
+                        config, feat_dtype=self.feat_dtype)
                 self._set_config(fp, config)
         plan = plan_for(g, arch=arch, in_dim=in_dim, hidden_dim=hidden_dim,
                         num_layers=num_layers, edge_vals=edge_vals,
                         config=config, tune_mode=self.tune_mode,
                         tune_iters=self.tune_iters, seed=self.seed,
-                        with_backward=self.with_backward)
+                        with_backward=self.with_backward,
+                        feat_dtype=self.feat_dtype)
         if config is None:
             self._set_config(fp, plan.config)
         if self.bucket_shapes:

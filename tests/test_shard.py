@@ -115,9 +115,13 @@ def test_plan_jit_args_convention():
     ref = plan.executor("xla")(jnp.asarray(feat))
     np.testing.assert_array_equal(np.asarray(ex(jnp.asarray(feat))),
                                   np.asarray(ref))
-    # default drops the unbucketed edge members; with_edges keeps them
-    assert plan.jit_args()[0][5] is None
-    assert plan.jit_args(with_edges=True)[0][5] is not None
+    # default drops the unbucketed edge members (they sit after the
+    # tile-shaped fields, incl. the block_visited mask); with_edges keeps
+    # them
+    from repro.kernels.ops import N_TILE_FIELDS
+    assert plan.jit_args()[0][N_TILE_FIELDS - 1] is not None  # block_visited
+    assert plan.jit_args()[0][N_TILE_FIELDS] is None          # edge_slot
+    assert plan.jit_args(with_edges=True)[0][N_TILE_FIELDS] is not None
 
 
 def test_plan_cache_lru_bounds():
