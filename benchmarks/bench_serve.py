@@ -5,6 +5,8 @@ requests/s, latency percentiles, batch occupancy and plan-cache behavior
     PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
 
 CSV contract per line: name,us_per_call,derived (us_per_call = per request).
+p50/p99 come from the engine's bounded latency histograms — the same
+registry `--metrics-out` exports (docs/observability.md).
 """
 from __future__ import annotations
 

@@ -9,11 +9,16 @@ kernel installed by the custom VJP (docs/training.md).
     PYTHONPATH=src python -m benchmarks.bench_train [--smoke]
 
 CSV contract per line: name,us_per_call,derived (us_per_call = per step).
+p50/p99 in the derived field come from the obs histogram fed the same
+iteration samples as the median; the final ``obs_overhead`` row measures
+the cost of that instrumentation against the step time
+(docs/observability.md documents the figure).
 """
 from __future__ import annotations
 
 import argparse
 import sys
+import time
 
 
 def run(smoke: bool = True):
@@ -24,6 +29,7 @@ def run(smoke: bool = True):
     from benchmarks.common import emit, time_fn
     from repro.graphs.csr import random_power_law
     from repro.models.gnn import GNNConfig, build_gnn, make_gnn_train_step
+    from repro.obs import MetricsRegistry, SpanTracer
     from repro.optim.adamw import AdamWConfig, adamw_init
 
     if smoke:
@@ -46,6 +52,8 @@ def run(smoke: bool = True):
     km = KernelModel()
     props = extract_graph_props(g, detect_communities=False)
 
+    registry = MetricsRegistry()
+    ref_gcn_xla_f32 = None
     for arch in ["gcn", "gat"]:
         ref_step = None
         # bf16-vs-f32 on the static-edge-value arch (GAT's softmax path
@@ -71,10 +79,17 @@ def run(smoke: bool = True):
                     new_state, metrics = step_fn(state, batch)
                     return metrics["loss"]
 
-                t = time_fn(one_step, warmup=1, iters=iters)
+                h = registry.histogram(
+                    "bench_train_step_seconds",
+                    labels={"case": f"{arch}/{backend}/{feat_dtype}"},
+                    desc="per-iteration step wall time")
+                t = time_fn(one_step, warmup=1, iters=iters,
+                            observe=h.observe)
                 if backend == "xla" and feat_dtype == "float32":
                     ref_step = t
                     speed = ""
+                    if arch == "gcn":
+                        ref_gcn_xla_f32 = t
                 else:
                     speed = (f";vs_xla_f32={ref_step / t:.2f}x"
                              if ref_step is not None else "")
@@ -86,7 +101,33 @@ def run(smoke: bool = True):
                      f"/n{num_nodes}", t * 1e6,
                      f"tiles={model.plan.stats['tiles']};"
                      f"bwd_tiles={pb.num_tiles if pb is not None else '-'};"
+                     f"p50_us={h.percentile(50) * 1e6:.1f};"
+                     f"p99_us={h.percentile(99) * 1e6:.1f};"
                      f"model_bytes={mbytes:.0f}{speed}")
+
+    # instrumentation overhead: what one traced span + a handful of
+    # histogram observes cost per trained step, relative to the gcn/xla/f32
+    # step above (acceptance: < 2% — docs/observability.md)
+    tracer = SpanTracer(registry)
+    probe = registry.histogram("obs_overhead_probe_seconds")
+    n_obs, n_span = 20_000, 2_000
+    t0 = time.perf_counter()
+    for _ in range(n_obs):
+        probe.observe(1e-3)
+    per_observe = (time.perf_counter() - t0) / n_obs
+    t0 = time.perf_counter()
+    for _ in range(n_span):
+        with tracer.span("overhead_probe"):
+            pass
+    per_span = (time.perf_counter() - t0) / n_span
+    # a Trainer step books 1 span-equivalent + ~4 observes (step histogram
+    # + counters share the same lock-protected update path)
+    per_step = per_span + 4 * per_observe
+    pct = (100.0 * per_step / ref_gcn_xla_f32
+           if ref_gcn_xla_f32 else float("nan"))
+    emit("obs_overhead/per_step", per_step * 1e6,
+         f"span_us={per_span * 1e6:.2f};observe_us={per_observe * 1e6:.2f};"
+         f"pct_of_gcn_xla_f32_step={pct:.3f}%")
 
 
 def main(argv=None) -> int:

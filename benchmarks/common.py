@@ -7,8 +7,10 @@ from typing import Callable, Optional
 import jax
 import numpy as np
 
-__all__ = ["time_fn", "emit", "load_replica", "start_capture",
-           "take_captured_rows"]
+from repro.obs import run_context
+
+__all__ = ["time_fn", "emit", "load_replica", "run_context",
+           "start_capture", "take_captured_rows"]
 
 # When capture is active (benchmarks.run --json-dir), every emit() row is
 # also recorded here so run.py can write machine-readable BENCH_<name>.json
@@ -28,8 +30,13 @@ def take_captured_rows() -> list:
     return rows
 
 
-def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall-time (s) of a jax function (block_until_ready)."""
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+            observe: Optional[Callable[[float], None]] = None) -> float:
+    """Median wall-time (s) of a jax function (block_until_ready).
+
+    ``observe`` receives each post-warmup iteration time — pass
+    ``Histogram.observe`` to get p50/p99 from the same samples the median
+    is computed from (docs/observability.md)."""
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
@@ -39,6 +46,8 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
         out = fn(*args)
         jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
+        if observe is not None:
+            observe(ts[-1])
     return float(np.median(ts))
 
 

@@ -73,6 +73,7 @@ def main(argv=None) -> int:
             with open(path, "w") as f:
                 json.dump({"section": title, "module": module, "ok": ok,
                            "wall_s": round(wall, 2),
+                           "context": common.run_context(),
                            "rows": common.take_captured_rows()}, f, indent=1)
             print(f"# wrote {path}")
     if failed:

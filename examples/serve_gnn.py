@@ -32,8 +32,8 @@ def main():
     reqs = [engine.submit(int(s)) for s in rng.integers(0, g.num_nodes, 12)]
     engine.step(force=True)
     print(f"served {len(reqs)} requests in "
-          f"{len(engine.stats.batch_sizes)} micro-batches; "
-          f"avg subgraph = {np.mean(engine.stats.sub_nodes):.0f} nodes")
+          f"{engine.stats.batch_size.count} micro-batches; "
+          f"avg subgraph = {engine.stats.sub_nodes.mean:.0f} nodes")
 
     # --- hot seed: second lookup is an exact plan-cache hit ---
     hot = int(reqs[0].seed)

@@ -36,6 +36,7 @@ from repro.compat import shard_map
 from repro.core.plan import Plan
 from repro.core.shard import PlanShards
 from repro.kernels.ops import _SCHED_ARRAY_FIELDS, N_TILE_FIELDS
+from repro.obs import MetricsRegistry
 
 __all__ = ["SHARD_AXIS", "ShardedExecutor", "local_step_value_and_grad",
            "make_sharded_logits_fn", "make_sharded_train_step", "shard_mesh",
@@ -134,6 +135,21 @@ def local_step_value_and_grad(logits_of, params, labels_l, mask_l,
     return grads, loss, {"loss": loss, "accuracy": accn}
 
 
+def _record_shard_gauges(registry: MetricsRegistry, shards: PlanShards):
+    """Partition-shape gauges shared by every sharded entry point: edge
+    balance across shards and per-shard halo node counts."""
+    st = shards.stats()
+    registry.gauge(
+        "shard_edge_balance",
+        desc="max/mean edges per shard (1.0 = perfect)").set(
+        st["edge_balance"])
+    for p, h in enumerate(shards.halo):
+        registry.gauge(
+            "shard_halo_nodes", labels={"shard": p},
+            desc="remote source nodes shard p reads (selective-"
+                 "exchange lower bound)").set(len(h))
+
+
 class ShardedExecutor:
     """Multi-device counterpart of `core.aggregate.PlanExecutor`.
 
@@ -151,7 +167,8 @@ class ShardedExecutor:
     """
 
     def __init__(self, shards: PlanShards, *, backend: str = "xla",
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None,
+                 registry: Optional[MetricsRegistry] = None):
         self.shards = shards
         self.spec = shards.spec
         self.backend = backend
@@ -166,12 +183,32 @@ class ShardedExecutor:
         self._edge_ids = None
         self._fwd = None
         self._dyn = None
+        # per-shard exchange/balance gauges: halo node counts are known
+        # now; halo BYTES need the feature dim, recorded on first call
+        self.registry = registry if registry is not None else MetricsRegistry()
+        _record_shard_gauges(self.registry, shards)
+        self._halo_bytes_dim = None
+
+    def _record_halo_bytes(self, dim: int) -> None:
+        """Per-shard halo traffic of a selective exchange at this feature
+        width — the lower bound the all-gather transport is compared
+        against (docs/distributed.md)."""
+        if self._halo_bytes_dim == dim:
+            return
+        self._halo_bytes_dim = dim
+        nbytes = self.feat_dtype.itemsize * dim
+        for p, h in enumerate(self.shards.halo):
+            self.registry.gauge(
+                "shard_halo_bytes", labels={"shard": p},
+                desc="halo nodes x feature dim x dtype bytes").set(
+                len(h) * nbytes)
 
     # -------------- static edge values --------------
 
     def __call__(self, feat: jax.Array) -> jax.Array:
         if self._fwd is None:
             self._fwd = self._build(dynamic=False)
+        self._record_halo_bytes(int(feat.shape[1]))
         args_f, args_b = self._args
         return self._fwd(feat, args_f, args_b)
 
@@ -193,6 +230,7 @@ class ShardedExecutor:
                 ids[p, : hi - lo] = np.arange(lo, hi)
                 msk[p, : hi - lo] = 1.0
             self._edge_ids = (jnp.asarray(ids), jnp.asarray(msk))
+        self._record_halo_bytes(int(feat.shape[1]))
         args_f, args_b = self._args_dyn
         ids, msk = self._edge_ids
         return self._dyn(feat, edge_values, ids, msk, args_f, args_b)
@@ -274,7 +312,8 @@ def make_sharded_logits_fn(cfg, shards: PlanShards, *,
 
 
 def make_sharded_train_step(cfg, shards: PlanShards, opt, *,
-                            mesh: Optional[Mesh] = None, jit: bool = True):
+                            mesh: Optional[Mesh] = None, jit: bool = True,
+                            registry: Optional[MetricsRegistry] = None):
     """`Trainer`-shaped ``step_fn(state, batch)`` for sharded full-graph
     training: per-device forward/backward over the shard sub-schedules,
     psum'd masked loss, gradients returned replicated by the `shard_map`
@@ -285,6 +324,15 @@ def make_sharded_train_step(cfg, shards: PlanShards, opt, *,
     "mask"]}`` in the parent plan's node order; the padded tail rows are
     masked out of the loss, so the loss matches the 1-device step."""
     from repro.optim.adamw import adamw_update
+
+    if registry is not None:
+        _record_shard_gauges(registry, shards)
+        nbytes = jnp.dtype(cfg.feat_dtype).itemsize * cfg.in_dim
+        for p, h in enumerate(shards.halo):
+            registry.gauge(
+                "shard_halo_bytes", labels={"shard": p},
+                desc="halo nodes x feature dim x dtype bytes").set(
+                len(h) * nbytes)
 
     mesh, (args_f, args_b), local_logits = _model_pieces(cfg, shards, mesh)
     spec = shards.spec

@@ -8,10 +8,15 @@ a Zipf-popularity request trace through the ServingEngine (micro-batcher +
 plan cache) and reports requests/s, p50/p99 latency, batch occupancy and
 plan-cache hit rate.  `--verify N` cross-checks N batched results against
 single-request inference (the end-to-end exactness criterion).
+
+Stats are printed as the JSON metrics exporter's document (one registry
+feeds both stdout and ``--metrics-out``, so they always agree —
+docs/observability.md).  ``--smoke`` shrinks everything for CI.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 
@@ -60,8 +65,23 @@ def main(argv=None) -> int:
                    default=True, help="disable shape bucketing")
     p.add_argument("--verify", type=int, default=8,
                    help="cross-check N requests vs single-request inference")
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny CI-sized run (overrides --num-nodes, "
+                        "--requests, --batch-window, --tune-iters)")
+    p.add_argument("--metrics-out", default=None,
+                   help="write the run's metrics registry to this path "
+                        "(docs/observability.md)")
+    p.add_argument("--metrics-format", default="json",
+                   choices=["json", "prom"],
+                   help="exporter for --metrics-out")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
+    if args.smoke:
+        args.num_nodes = 1500
+        args.requests = 24
+        args.batch_window = 8
+        args.tune_iters = 2
+        args.verify = min(args.verify, 2)
     if args.batch_window < 1:
         p.error("--batch-window must be >= 1")
     if args.requests < 1:
@@ -71,9 +91,12 @@ def main(argv=None) -> int:
 
     from repro.graphs.csr import random_power_law
     from repro.models.gnn import GNNConfig
+    from repro.obs import (MetricsRegistry, registry_to_json, run_context,
+                           write_metrics)
     from repro.serving import ServingConfig, ServingEngine
 
     t0 = time.time()
+    registry = MetricsRegistry()
     g = random_power_law(args.num_nodes, args.avg_degree, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     feat = rng.standard_normal((g.num_nodes, args.in_dim)).astype(np.float32)
@@ -88,7 +111,8 @@ def main(argv=None) -> int:
                               bucket_shapes=args.bucket,
                               tune_iters=args.tune_iters,
                               max_plans=(None if args.max_plans == 0
-                                         else args.max_plans)))
+                                         else args.max_plans)),
+        registry=registry)
     print(f"[serve_gnn] graph n={g.num_nodes} e={g.num_edges} arch={args.arch} "
           f"backend={args.backend} hops={engine.hops} "
           f"(setup {time.time() - t0:.1f}s)")
@@ -98,16 +122,23 @@ def main(argv=None) -> int:
     reqs = engine.run_trace(trace)
     s = engine.summary()
     c = s["cache"]
-    print(f"[serve_gnn] requests={s['requests']} batches={s['batches']} "
-          f"occupancy={s['batch_occupancy']:.2f} "
-          f"avg-sub-nodes={s['avg_sub_nodes']:.0f}")
-    print(f"[serve_gnn] throughput={s['req_per_s']:.1f} req/s "
-          f"p50={s['p50_ms']:.1f}ms p99={s['p99_ms']:.1f}ms")
-    print(f"[serve_gnn] plan-cache: exact={c['exact_hits']} "
-          f"config={c['config_hits']} miss={c['misses']} "
-          f"hit-rate={c['hit_rate']:.2f} "
-          f"(plans={c['plans']} configs={c['configs']} "
-          f"evictions={c['evictions']})")
+    # one registry, one exporter: the stdout stats ARE the JSON metrics
+    # document, and --metrics-out writes the same document (span durations
+    # live in the registry as span_seconds{span=...} histograms)
+    doc = registry_to_json(registry, context=run_context())
+    print(f"[serve_gnn] requests={s['requests']} "
+          f"throughput={s['req_per_s']:.1f} req/s "
+          f"hit-rate={c['hit_rate']:.2f}")
+    print(json.dumps(doc, indent=2))
+    if args.metrics_out:
+        if args.metrics_format == "json":
+            with open(args.metrics_out, "w", encoding="utf-8") as f:
+                json.dump(doc, f, indent=2)
+                f.write("\n")
+        else:
+            write_metrics(registry, args.metrics_out, "prom")
+        print(f"[serve_gnn] wrote metrics ({args.metrics_format}) -> "
+              f"{args.metrics_out}")
 
     ok = True
     if args.verify > 0:

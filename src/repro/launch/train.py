@@ -46,6 +46,16 @@ import time
 GNN_ARCHS = ("gcn", "gin", "gat")
 
 
+def _write_metrics(args, registry) -> None:
+    if not args.metrics_out:
+        return
+    from repro.obs import run_context, write_metrics
+    write_metrics(registry, args.metrics_out, args.metrics_format,
+                  context=run_context())
+    print(f"[train] wrote metrics ({args.metrics_format}) -> "
+          f"{args.metrics_out}")
+
+
 class _ShardedBatches:
     """step -> list of `num_shards` loader batches (one per device), and a
     ``close()`` the Trainer forwards to the underlying loader."""
@@ -71,11 +81,13 @@ def _main_gnn_sampled(args) -> int:
     from repro.models.gnn import (GNNConfig, init_gnn_params,
                                   structural_labels)
     from repro.optim.adamw import AdamWConfig, adamw_init, cosine_schedule
+    from repro.obs import MetricsRegistry
     from repro.runtime.trainer import (FailureInjector, Trainer,
                                        TrainerConfig)
     from repro.sampling import (LoaderConfig, SampledLoader,
                                 SampledTrainStep, ShardedSampledTrainStep)
 
+    registry = MetricsRegistry()
     t0 = time.time()
     g, spec, feat = make_dataset(args.dataset, scale=args.scale,
                                  max_nodes=args.max_nodes, seed=args.seed,
@@ -95,13 +107,15 @@ def _main_gnn_sampled(args) -> int:
     loader = SampledLoader(
         g, feat, labels, cfg,
         LoaderConfig(fanouts=fanouts, batch_nodes=args.batch_nodes,
-                     seed=args.seed, tune_iters=4))
+                     seed=args.seed, tune_iters=4),
+        registry=registry)
     opt = AdamWConfig(lr=args.lr,
                       schedule=cosine_schedule(args.warmup, args.steps))
     if args.shards > 1:
         # data-parallel sampled training: every optimizer step consumes
         # `shards` loader batches, grads psum over the shard mesh axis
-        step_fn = ShardedSampledTrainStep(cfg, opt, args.shards)
+        step_fn = ShardedSampledTrainStep(cfg, opt, args.shards,
+                                          registry=registry)
         batch_fn = _ShardedBatches(loader, args.shards)
     else:
         step_fn = SampledTrainStep(cfg, opt)
@@ -115,7 +129,7 @@ def _main_gnn_sampled(args) -> int:
         TrainerConfig(ckpt_dir=ckpt_dir, ckpt_every=args.ckpt_every,
                       log_every=10),
         step_fn, batch_fn, (params, adamw_init(params)),
-        injector=FailureInjector(args.fail_at or ()))
+        injector=FailureInjector(args.fail_at or ()), registry=registry)
     t1 = time.time()
     try:
         trainer.run(args.steps)
@@ -133,6 +147,7 @@ def _main_gnn_sampled(args) -> int:
           f"jit_buckets={step_fn.num_buckets} traces={step_fn.traces} "
           f"cache_hit_rate={cache['hit_rate']:.2f} "
           f"wall={time.time()-t1:.1f}s")
+    _write_metrics(args, registry)
     return 0
 
 
@@ -145,10 +160,12 @@ def _main_gnn(args) -> int:
     from repro.graphs.datasets import make_dataset
     from repro.models.gnn import (GNNConfig, build_gnn, make_gnn_train_step,
                                   planted_labels)
+    from repro.obs import MetricsRegistry
     from repro.optim.adamw import AdamWConfig, adamw_init, cosine_schedule
     from repro.runtime.trainer import (FailureInjector, Trainer,
                                        TrainerConfig)
 
+    registry = MetricsRegistry()
     max_nodes = args.max_nodes if args.max_nodes is not None else 2000
     g, spec, feat = make_dataset(args.dataset, scale=args.scale,
                                  max_nodes=max_nodes, seed=args.seed)
@@ -180,7 +197,8 @@ def _main_gnn(args) -> int:
               f"edges/shard={st['edges_per_shard']} "
               f"halo={st['halo_per_shard']} "
               f"edge_balance={st['edge_balance']:.2f}")
-        step_fn = make_sharded_train_step(cfg, shards, opt)
+        step_fn = make_sharded_train_step(cfg, shards, opt,
+                                          registry=registry)
     else:
         step_fn = make_gnn_train_step(model, opt)
     # unlike the LM branch, arch+seed does not determine parameter shapes —
@@ -193,7 +211,7 @@ def _main_gnn(args) -> int:
                       log_every=10),
         step_fn, lambda step: batch,
         (model.params, adamw_init(model.params)),
-        injector=FailureInjector(args.fail_at or ()))
+        injector=FailureInjector(args.fail_at or ()), registry=registry)
     t0 = time.time()
     trainer.run(args.steps)
     hist = trainer.metrics_history
@@ -204,6 +222,7 @@ def _main_gnn(args) -> int:
           f"dataset={args.dataset} shards={args.shards} steps={len(hist)} "
           f"{losses}avg_step={trainer.avg_step_time()*1e3:.1f}ms "
           f"wall={time.time()-t0:.1f}s")
+    _write_metrics(args, registry)
     return 0
 
 
@@ -250,6 +269,12 @@ def main(argv=None) -> int:
     p.add_argument("--ckpt-every", type=int, default=50)
     p.add_argument("--fail-at", type=int, action="append", default=None,
                    help="inject a simulated failure at this step (repeatable)")
+    p.add_argument("--metrics-out", default=None,
+                   help="write the run's metrics registry to this path "
+                        "(docs/observability.md)")
+    p.add_argument("--metrics-format", default="json",
+                   choices=["json", "prom"],
+                   help="exporter for --metrics-out")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -270,9 +295,11 @@ def main(argv=None) -> int:
     from repro.data import PipelineConfig, TokenPipeline, make_lm_batch
     from repro.models.lm import make_train_step
     from repro.nn.transformer import lm_init
+    from repro.obs import MetricsRegistry
     from repro.optim.adamw import AdamWConfig, adamw_init, cosine_schedule
     from repro.runtime.trainer import (FailureInjector, Trainer, TrainerConfig)
 
+    registry = MetricsRegistry()
     arch = get_arch(args.arch)
     cfg = arch.reduced() if args.reduced else arch.full()
     params, specs = lm_init(cfg, jax.random.PRNGKey(args.seed))
@@ -302,7 +329,7 @@ def main(argv=None) -> int:
         TrainerConfig(ckpt_dir=ckpt_dir, ckpt_every=args.ckpt_every,
                       log_every=10),
         step_fn, batch_fn, (params, opt_state),
-        injector=FailureInjector(args.fail_at or ()))
+        injector=FailureInjector(args.fail_at or ()), registry=registry)
     t0 = time.time()
     trainer.run(args.steps)
     dt = time.time() - t0
@@ -310,6 +337,7 @@ def main(argv=None) -> int:
     print(f"[train] arch={cfg.name} steps={len(hist)} "
           f"first_loss={hist[0]['loss']:.4f} last_loss={hist[-1]['loss']:.4f} "
           f"wall={dt:.1f}s")
+    _write_metrics(args, registry)
     return 0
 
 

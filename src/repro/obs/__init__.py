@@ -1,0 +1,29 @@
+"""Unified runtime observability (docs/observability.md).
+
+One `MetricsRegistry` threaded through the serving engine, plan cache,
+sampled loader, trainer, sharded executors and benchmarks; a `SpanTracer`
+for nested wall-clock spans with honest-under-async-dispatch close
+semantics; JSON / Prometheus exporters that render the same registry.
+"""
+from repro.obs.context import run_context
+from repro.obs.export import (lint_prometheus, registry_to_json,
+                              to_prometheus_text, write_metrics)
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               exponential_bounds, pow2_bounds)
+from repro.obs.trace import Span, SpanTracer
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Span",
+    "SpanTracer",
+    "exponential_bounds",
+    "lint_prometheus",
+    "pow2_bounds",
+    "registry_to_json",
+    "run_context",
+    "to_prometheus_text",
+    "write_metrics",
+]

@@ -16,6 +16,7 @@ from typing import Any, Callable, Iterable, Optional
 import jax
 import numpy as np
 
+from repro.obs import MetricsRegistry
 from repro.runtime.checkpoint import (AsyncCheckpointer, latest_step,
                                       restore_checkpoint)
 
@@ -70,7 +71,8 @@ class Trainer:
                  batch_fn: Callable[[int], Pytree], init_state: Pytree,
                  *, state_shardings: Optional[Pytree] = None,
                  injector: Optional[FailureInjector] = None,
-                 log_fn: Callable[[str], None] = print):
+                 log_fn: Callable[[str], None] = print,
+                 registry: Optional[MetricsRegistry] = None):
         self.cfg = cfg
         self.step_fn = step_fn
         self.batch_fn = batch_fn
@@ -78,6 +80,18 @@ class Trainer:
         self.state_shardings = state_shardings
         self.injector = injector
         self.log = log_fn
+        # step-time histogram + restore/checkpoint counters; shares the
+        # launch driver's registry when one is threaded in, so train CLI
+        # metrics land in the same --metrics-out document as the loader's
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._h_step = self.registry.histogram(
+            "train_step_seconds", desc="batch_fn + step_fn wall time")
+        self._c_steps = self.registry.counter(
+            "train_steps_total", desc="optimizer steps run")
+        self._c_restores = self.registry.counter(
+            "train_restores_total", desc="checkpoint restores (restarts)")
+        self._c_ckpts = self.registry.counter(
+            "train_checkpoints_total", desc="checkpoints written")
         self.ckpt = AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep)
         self.step = 0
         self.metrics_history: list[dict] = []
@@ -90,6 +104,7 @@ class Trainer:
                 self.cfg.ckpt_dir, self.state, step=s,
                 shardings=self.state_shardings)
             self.step = s
+            self._c_restores.inc()
             self.log(f"[trainer] restored checkpoint step={s}")
 
     def _run_until(self, until_step: int):
@@ -99,14 +114,19 @@ class Trainer:
             batch = self.batch_fn(self.step)
             t0 = time.time()
             self.state, metrics = self.step_fn(self.state, batch)
+            # the float() casts below block on the step's metric scalars,
+            # so this wall time covers device compute, not just dispatch
             metrics = {k: float(v) for k, v in metrics.items()}
             metrics["step_time_s"] = time.time() - t0
             metrics["step"] = self.step
+            self._h_step.observe(metrics["step_time_s"])
+            self._c_steps.inc()
             self.metrics_history.append(metrics)
             self.step += 1
             if self.step % self.cfg.ckpt_every == 0:
                 self.ckpt.save(self.step, self.state,
                                metadata={"step": self.step})
+                self._c_ckpts.inc()
             if self.step % self.cfg.log_every == 0:
                 keys = [k for k in ("loss", "xent", "accuracy", "grad_norm")
                         if k in metrics]

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Optional, Sequence
 
 import numpy as np
@@ -35,6 +36,7 @@ import numpy as np
 from repro.graphs.csr import CSRGraph
 from repro.graphs.subgraph import pad_to_nodes
 from repro.models.gnn import GNNConfig, gnn_block_loss
+from repro.obs import MetricsRegistry
 from repro.sampling.neighbor import SampledBatch, sample_blocks
 from repro.serving.plan_cache import PlanCache, bucket_pow2
 
@@ -103,7 +105,8 @@ class SampledLoader:
                  train_nodes: Optional[np.ndarray] = None,
                  cache: Optional[PlanCache] = None,
                  with_backward: Optional[bool] = None,
-                 start_thread: bool = True):
+                 start_thread: bool = True,
+                 registry: Optional[MetricsRegistry] = None):
         if cfg.arch not in ("gcn", "gin"):
             # fail at construction, not minutes later inside the first
             # jitted step (gat needs per-block dynamic-edge plumbing the
@@ -126,13 +129,30 @@ class SampledLoader:
                             else np.asarray(train_nodes, dtype=np.int64))
         if with_backward is None:
             with_backward = cfg.backend.startswith("pallas")
+        # metrics: sample/plan time per batch, prefetch stall seen by the
+        # consumer, and resync events — shared with the plan cache so one
+        # registry tells the whole loader story (docs/observability.md).
+        # The registry's per-metric locks make worker-thread observes and
+        # train-thread reads safe (raced in tests/test_obs.py).
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._h_sample = self.registry.histogram(
+            "loader_sample_seconds",
+            desc="fanout sampling + padding + planning per batch")
+        self._h_stall = self.registry.histogram(
+            "loader_prefetch_stall_seconds",
+            desc="consumer wait for a batch (0 when the prefetch buffer hit)")
+        self._c_batches = self.registry.counter(
+            "loader_batches_built_total", desc="sampled batches constructed")
+        self._c_resync = self.registry.counter(
+            "loader_resyncs_total",
+            desc="prefetch-buffer flushes on out-of-order access (restarts)")
         self.cache = cache if cache is not None else PlanCache(
             backend=cfg.backend, tune_mode=loader.tune_mode,
             tune_iters=loader.tune_iters, max_entries=loader.max_plans,
             bucket_shapes=loader.bucket_shapes, seed=loader.seed,
             with_backward=with_backward,
             config_fn=None if loader.use_tuner else sampled_agg_config,
-            feat_dtype=cfg.feat_dtype)
+            feat_dtype=cfg.feat_dtype, registry=self.registry)
         self.edge_mode = "gcn" if cfg.arch == "gcn" else "scale"
         n = len(self.train_nodes)
         b = min(loader.batch_nodes, n)
@@ -169,6 +189,7 @@ class SampledLoader:
 
     def batch_for(self, step: int) -> TrainBatch:
         """Pure: sample + pad + plan the batch for ``step`` (no buffer)."""
+        t0 = time.perf_counter()
         cfg, lc = self.cfg, self.lc
         sb = sample_blocks(self.g, self.seeds_for(step), lc.fanouts,
                            rng=np.random.default_rng((lc.seed, 1, step)),
@@ -200,19 +221,23 @@ class SampledLoader:
         labels[:len(sb.seeds)] = self.labels[sb.seeds]
         mask = np.zeros(p_last, np.float32)
         mask[:len(sb.seeds)] = 1.0
-        return TrainBatch(
+        batch = TrainBatch(
             feat=feat, labels=labels, mask=mask, entries=entries,
             seeds=sb.seeds, num_seeds=len(sb.seeds), step=step,
             key=(cfg.arch, cfg.backend, cfg.feat_dtype, p0,
                  tuple(key_parts)),
             raw_nodes=tuple(b.num_src for b in sb.blocks),
             raw_edges=tuple(b.graph.num_edges for b in sb.blocks))
+        self._h_sample.observe(time.perf_counter() - t0)
+        self._c_batches.inc()
+        return batch
 
     # ---------------- prefetching front ----------------
 
     def __call__(self, step: int) -> TrainBatch:
         if self._thread is None:
             return self.batch_for(step)
+        t0 = time.perf_counter()
         with self._cond:
             if self._err is not None:
                 raise RuntimeError("sample loader worker died") from self._err
@@ -223,6 +248,7 @@ class SampledLoader:
                 # buffered, being computed, nor next in line): resync
                 self._buf.clear()
                 self._head = step
+                self._c_resync.inc()
                 self._cond.notify_all()
             while step not in self._buf:
                 if self._err is not None:
@@ -231,7 +257,10 @@ class SampledLoader:
                 self._cond.wait(timeout=0.5)
             batch = self._buf.pop(step)
             self._cond.notify_all()
-            return batch
+        # stall = how long device compute sat waiting on host-side
+        # sampling/planning; ~0 means the double buffer is doing its job
+        self._h_stall.observe(time.perf_counter() - t0)
+        return batch
 
     batch_fn = __call__
 
@@ -277,7 +306,11 @@ class SampledLoader:
 
     def stats(self) -> dict:
         return {"cache": self.cache.stats(),
-                "steps_per_epoch": self.steps_per_epoch}
+                "steps_per_epoch": self.steps_per_epoch,
+                "batches_built": int(self._c_batches.value),
+                "resyncs": int(self._c_resync.value),
+                "sample_p50_ms": self._h_sample.percentile(50) * 1e3,
+                "prefetch_stall_p99_ms": self._h_stall.percentile(99) * 1e3}
 
 
 class SampledTrainStep:
@@ -365,7 +398,8 @@ class ShardedSampledTrainStep:
     """
 
     def __init__(self, cfg: GNNConfig, opt, num_shards: int, *,
-                 jit: bool = True, mesh=None):
+                 jit: bool = True, mesh=None,
+                 registry: Optional[MetricsRegistry] = None):
         from repro.distributed.graph_shard import shard_mesh
         if cfg.arch not in ("gcn", "gin"):
             raise ValueError(
@@ -377,11 +411,23 @@ class ShardedSampledTrainStep:
         self.jit = jit
         self._fns: dict[tuple, object] = {}
         self.traces = 0
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._c_replans = self.registry.counter(
+            "sampled_replans_total",
+            desc="blocks repartitioned under a step-mate's wider bucket "
+                 "config (pow2 bucket-boundary straddles)")
+        self._h_skew = self.registry.histogram(
+            "sampled_step_skew", unit="",
+            bounds=(0.01, 0.02, 0.05, 0.1, 0.2, 0.3, 0.5, 0.75, 1.0),
+            desc="per-step shard work skew: (max-min)/max of raw edge "
+                 "counts over the step's loader batches")
 
     def __call__(self, state, batches: Sequence[TrainBatch]):
         if len(batches) != self.num_shards:
             raise ValueError(
                 f"need {self.num_shards} batches per step, got {len(batches)}")
+        work = [sum(b.raw_edges) for b in batches]
+        self._h_skew.observe((max(work) - min(work)) / max(max(work), 1))
         key, operands, statics = self._stack(batches)
         fn = self._fns.get(key)
         if fn is None:
@@ -394,8 +440,7 @@ class ShardedSampledTrainStep:
 
     # -------------- host-side uniformize + stack --------------
 
-    @staticmethod
-    def _replan(ent, cfg_t):
+    def _replan(self, ent, cfg_t):
         """Repartition a cache entry's block under a different `AggConfig`
         (memoized on the entry): the rare batch whose pow2 node bucket —
         and therefore heuristic config — disagrees with its step-mates'.
@@ -404,6 +449,7 @@ class ShardedSampledTrainStep:
         memo = ent.extras.setdefault("replans", {})
         plan = memo.get(cfg_t)
         if plan is None:
+            self._c_replans.inc()
             from repro.core.partition import (partition_graph,
                                               transpose_graph)
             from repro.core.plan import Plan

@@ -25,6 +25,7 @@ import numpy as np
 from repro.graphs.csr import CSRGraph
 from repro.graphs.subgraph import batch_egos, extract_ego, pad_to_nodes
 from repro.models.gnn import GNNConfig, GNNModel, gcn_edge_values, init_gnn_params
+from repro.obs import MetricsRegistry, SpanTracer, pow2_bounds
 from repro.serving.batcher import MicroBatcher, Request
 from repro.serving.plan_cache import PlanCache, bucket_pow2
 
@@ -47,14 +48,39 @@ class ServingConfig:
     jit: bool = True
 
 
-@dataclasses.dataclass
 class _EngineStats:
-    latencies: list = dataclasses.field(default_factory=list)
-    batch_sizes: list = dataclasses.field(default_factory=list)
-    sub_nodes: list = dataclasses.field(default_factory=list)
-    compute_s: list = dataclasses.field(default_factory=list)
-    t_first_submit: Optional[float] = None
-    t_last_done: Optional[float] = None
+    """Registry-backed engine metrics — BOUNDED under sustained traffic.
+
+    The previous incarnation appended per-request floats to plain lists,
+    which grow forever in a long-lived server; every series is now a
+    fixed-bucket `repro.obs.Histogram` (memory O(buckets), percentiles by
+    interpolation) or a counter in the engine's `MetricsRegistry`, so
+    `summary()` and the exporters read the same state.
+    """
+
+    def __init__(self, registry: MetricsRegistry):
+        self.registry = registry
+        self.latency = registry.histogram(
+            "serve_request_latency_seconds",
+            desc="submit -> result request latency")
+        self.queue_wait = registry.histogram(
+            "serve_queue_wait_seconds",
+            desc="submit -> micro-batch-fire queue wait")
+        self.compute = registry.histogram(
+            "serve_batch_compute_seconds",
+            desc="extract + plan + forward wall time per fired batch")
+        self.batch_size = registry.histogram(
+            "serve_batch_size", unit="", bounds=pow2_bounds(4096),
+            desc="requests per fired micro-batch")
+        self.sub_nodes = registry.histogram(
+            "serve_batch_sub_nodes", unit="", bounds=pow2_bounds(1 << 22),
+            desc="unpadded subgraph node count per fired batch")
+        self.requests = registry.counter(
+            "serve_requests_total", desc="completed micro-batched requests")
+        self.batches = registry.counter(
+            "serve_batches_total", desc="fired micro-batches")
+        self.t_first_submit: Optional[float] = None
+        self.t_last_done: Optional[float] = None
 
 
 class ServingEngine:
@@ -71,6 +97,10 @@ class ServingEngine:
         "pallas"/"pallas_interpret" with a TPU/interpreter).
     params : optional model pytree (default: fresh `init_gnn_params`).
     serving : ServingConfig — batching/bucketing/tuner knobs.
+    registry : optional `repro.obs.MetricsRegistry` shared with the rest
+        of a process (the launch drivers thread one through engine +
+        cache + tracer and export it via ``--metrics-out``); by default
+        the engine keeps a private registry on ``self.registry``.
 
     API: `serve_batch(seeds) -> (len(seeds), num_classes) float32 logits`
     synchronously; `submit()`/`step()` for micro-batched request flow;
@@ -86,7 +116,8 @@ class ServingEngine:
 
     def __init__(self, graph: CSRGraph, feat: np.ndarray, cfg: GNNConfig, *,
                  params=None, key: Optional[jax.Array] = None,
-                 serving: Optional[ServingConfig] = None):
+                 serving: Optional[ServingConfig] = None,
+                 registry: Optional[MetricsRegistry] = None):
         assert feat.shape == (graph.num_nodes, cfg.in_dim), \
             (feat.shape, graph.num_nodes, cfg.in_dim)
         self.graph = graph
@@ -102,18 +133,24 @@ class ServingEngine:
             self.src_graph, self.src_vals = gcn_edge_values(graph)
         else:
             self.src_graph, self.src_vals = graph, None
+        # one registry per engine unless the caller threads a shared one in
+        # (the launch drivers do — engine + cache + tracer then export as
+        # one document; see docs/observability.md)
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.trace = SpanTracer(self.registry)
         self.cache = PlanCache(
             backend=cfg.backend, tune_mode=self.serving.tune_mode,
             tune_iters=self.serving.tune_iters,
             max_plans=self.serving.max_plans,
             max_configs=self.serving.max_configs,
             bucket_shapes=self.serving.bucket_shapes,
-            feat_dtype=cfg.feat_dtype)
+            feat_dtype=cfg.feat_dtype,
+            registry=self.registry)
         self.batcher = MicroBatcher(
             max_batch=self.serving.max_batch,
             max_wait=(np.inf if self.serving.max_wait is None
                       else self.serving.max_wait))
-        self.stats = _EngineStats()
+        self.stats = _EngineStats(self.registry)
         self._next_rid = 0
         # shared jitted forwards, keyed by (agg statics, schedule/feat
         # shapes): entries in the same shape class reuse one executable —
@@ -136,25 +173,35 @@ class ServingEngine:
         """Batched inference for `seeds` -> (len(seeds), num_classes)."""
         t0 = time.perf_counter()
         cfg = self.cfg
-        sub, nodes, seed_local, vals = self._extract(seeds)
-        n_real = sub.num_nodes
-        if self.serving.bucket_shapes:
-            sub = pad_to_nodes(sub, bucket_pow2(n_real))
-        ent = self.cache.get_or_build(
-            sub, arch=cfg.arch, in_dim=cfg.in_dim, hidden_dim=cfg.hidden_dim,
-            num_layers=cfg.num_layers, edge_vals=vals)
-        if ent.apply_fn is None:
-            ent.apply_fn = self._make_apply(ent)
-        feat_sub = np.zeros((sub.num_nodes, cfg.in_dim), np.float32)
-        feat_sub[:n_real] = self.feat[nodes]
-        # ship features at the policy dtype (bf16 halves the host->device
-        # bytes; the model's casts make this a no-op for float32)
-        out = np.asarray(jax.block_until_ready(
-            ent.apply_fn(self.params,
-                         jnp.asarray(feat_sub, dtype=cfg.compute_dtype))))
-        self.stats.batch_sizes.append(len(seeds))
-        self.stats.sub_nodes.append(n_real)
-        self.stats.compute_s.append(time.perf_counter() - t0)
+        with self.trace.span("serve_batch") as sb:
+            with self.trace.span("extract"):
+                sub, nodes, seed_local, vals = self._extract(seeds)
+            n_real = sub.num_nodes
+            if self.serving.bucket_shapes:
+                sub = pad_to_nodes(sub, bucket_pow2(n_real))
+            with self.trace.span("plan"):
+                ent = self.cache.get_or_build(
+                    sub, arch=cfg.arch, in_dim=cfg.in_dim,
+                    hidden_dim=cfg.hidden_dim, num_layers=cfg.num_layers,
+                    edge_vals=vals)
+                if ent.apply_fn is None:
+                    ent.apply_fn = self._make_apply(ent)
+            feat_sub = np.zeros((sub.num_nodes, cfg.in_dim), np.float32)
+            feat_sub[:n_real] = self.feat[nodes]
+            # ship features at the policy dtype (bf16 halves the
+            # host->device bytes; the model's casts make this a no-op for
+            # float32).  block_until_ready keeps the compute span honest —
+            # without it the span times the dispatch, not the device work.
+            with self.trace.span("compute"):
+                out = np.asarray(jax.block_until_ready(
+                    ent.apply_fn(self.params,
+                                 jnp.asarray(feat_sub,
+                                             dtype=cfg.compute_dtype))))
+            sb.note(batch=len(seeds), sub_nodes=n_real)
+        self.stats.batches.inc()
+        self.stats.batch_size.observe(len(seeds))
+        self.stats.sub_nodes.observe(n_real)
+        self.stats.compute.observe(time.perf_counter() - t0)
         return out[np.asarray(seed_local)]
 
     def _make_apply(self, ent):
@@ -217,12 +264,16 @@ class ServingEngine:
                     or (force and self.batcher.pending())):
                 break
             batch = self.batcher.pop()
+            t_pop = time.perf_counter() if now is None else now
+            for r in batch:
+                self.stats.queue_wait.observe(max(t_pop - r.t_submit, 0.0))
             out = self.serve_batch([r.seed for r in batch])
             t_done = time.perf_counter() if now is None else now
             for i, r in enumerate(batch):
                 r.result = out[i]
                 r.t_done = t_done
-                self.stats.latencies.append(r.latency)
+                self.stats.latency.observe(r.latency)
+                self.stats.requests.inc()
             self.stats.t_last_done = t_done
             done.extend(batch)
         return done
@@ -237,18 +288,23 @@ class ServingEngine:
         return reqs
 
     def summary(self) -> dict:
+        """Metric summary; same keys as ever, now read from the bounded
+        registry histograms (percentiles are bucket-interpolated — see
+        `repro.obs.Histogram.percentile`)."""
         st = self.stats
-        lat = np.asarray(st.latencies, dtype=np.float64)
+        n_req = st.latency.count
         wall = ((st.t_last_done - st.t_first_submit)
-                if st.latencies and st.t_last_done is not None else 0.0)
+                if n_req and st.t_last_done is not None else 0.0)
         return {
-            "requests": len(lat),
-            "batches": len(st.batch_sizes),
-            "req_per_s": len(lat) / wall if wall > 0 else float("nan"),
-            "p50_ms": float(np.percentile(lat, 50) * 1e3) if len(lat) else float("nan"),
-            "p99_ms": float(np.percentile(lat, 99) * 1e3) if len(lat) else float("nan"),
-            "batch_occupancy": (float(np.mean(st.batch_sizes)) / self.serving.max_batch
-                                if st.batch_sizes else 0.0),
-            "avg_sub_nodes": float(np.mean(st.sub_nodes)) if st.sub_nodes else 0.0,
+            "requests": n_req,
+            "batches": st.batch_size.count,
+            "req_per_s": n_req / wall if wall > 0 else float("nan"),
+            "p50_ms": st.latency.percentile(50) * 1e3,
+            "p99_ms": st.latency.percentile(99) * 1e3,
+            "queue_wait_p50_ms": st.queue_wait.percentile(50) * 1e3,
+            "batch_occupancy": (st.batch_size.mean / self.serving.max_batch
+                                if st.batch_size.count else 0.0),
+            "avg_sub_nodes": (st.sub_nodes.mean if st.sub_nodes.count
+                              else 0.0),
             "cache": self.cache.stats(),
         }

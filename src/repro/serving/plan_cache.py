@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import time
 from collections import OrderedDict
 from typing import Any, Callable, Optional
 
@@ -34,6 +35,7 @@ from repro.core.model import AggConfig
 from repro.core.partition import pad_partition_tiles
 from repro.core.plan import Plan
 from repro.graphs.csr import CSRGraph
+from repro.obs import MetricsRegistry
 
 __all__ = [
     "CacheEntry",
@@ -104,6 +106,11 @@ class PlanCache:
     unbounded — configs are tiny, but a long-tailed serving workload can
     accumulate fingerprints forever).  Evictions from both levels are
     surfaced in `stats()`.
+
+    ``registry``: optional shared `repro.obs.MetricsRegistry` — hit/miss/
+    eviction counters, the build-time histogram, tuner cost and per-source
+    ``plan_cache_builds_total{source=tuner|memo|heuristic}`` provenance all
+    land there (a private registry is kept when none is given).
     """
 
     def __init__(self, *, backend: str = "xla", tune_mode: str = "model",
@@ -112,7 +119,8 @@ class PlanCache:
                  max_configs: Optional[int] = None,
                  bucket_shapes: bool = True, seed: int = 0,
                  with_backward: bool = False, config_fn=None,
-                 feat_dtype: str = "float32"):
+                 feat_dtype: str = "float32",
+                 registry: Optional[MetricsRegistry] = None):
         self.backend = backend
         self.tune_mode = tune_mode
         self.tune_iters = tune_iters
@@ -146,6 +154,33 @@ class PlanCache:
         self.misses = 0
         self.evictions = 0
         self.config_evictions = 0
+        # observability: the int attributes above stay the source of truth
+        # for stats() (back-compat); the registry mirrors them as counters
+        # and adds what ints can't carry — build-time distribution, tuner
+        # cost, and config provenance (which path chose each built plan's
+        # AggConfig: "tuner" search / fingerprint "memo" / caller-supplied
+        # "heuristic" config_fn) — see docs/observability.md.
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._c_exact = self.registry.counter(
+            "plan_cache_exact_hits_total", desc="ready-plan cache hits")
+        self._c_config = self.registry.counter(
+            "plan_cache_config_hits_total",
+            desc="fingerprint->config memo hits (plan rebuilt, tuner skipped)")
+        self._c_miss = self.registry.counter(
+            "plan_cache_misses_total", desc="full cache misses")
+        self._c_evict = self.registry.counter(
+            "plan_cache_evictions_total", desc="plan-level LRU evictions")
+        self._c_cfg_evict = self.registry.counter(
+            "plan_cache_config_evictions_total",
+            desc="config-memo LRU evictions")
+        self._h_build = self.registry.histogram(
+            "plan_cache_build_seconds",
+            desc="plan_for + tile padding + executor build on the miss path")
+        self._c_tuner_runs = self.registry.counter(
+            "tuner_runs_total", desc="evolutionary searches run")
+        self._c_tuner_evals = self.registry.counter(
+            "tuner_evaluations_total",
+            desc="unique tuner score-fn evaluations (TunerResult.evaluations)")
 
     def get_or_build(self, g: CSRGraph, *, arch: str, in_dim: int,
                      hidden_dim: int, num_layers: int,
@@ -158,6 +193,7 @@ class PlanCache:
         if ent is not None:
             self._plans.move_to_end(key)
             self.exact_hits += 1
+            self._c_exact.inc()
             ent.hits += 1
             return ent
 
@@ -166,14 +202,19 @@ class PlanCache:
         if config is not None:
             self._configs.move_to_end(fp)
             self.config_hits += 1
+            self._c_config.inc()
+            source = "memo"
         else:
             self.misses += 1
+            self._c_miss.inc()
+            source = "heuristic" if self.config_fn is not None else "tuner"
             if self.config_fn is not None:
                 config = self.config_fn(g)
                 if config.feat_dtype != self.feat_dtype:
                     config = dataclasses.replace(
                         config, feat_dtype=self.feat_dtype)
                 self._set_config(fp, config)
+        t_build = time.perf_counter()
         plan = plan_for(g, arch=arch, in_dim=in_dim, hidden_dim=hidden_dim,
                         num_layers=num_layers, edge_vals=edge_vals,
                         config=config, tune_mode=self.tune_mode,
@@ -182,6 +223,9 @@ class PlanCache:
                         feat_dtype=self.feat_dtype)
         if config is None:
             self._set_config(fp, plan.config)
+        if plan.tuner is not None:
+            self._c_tuner_runs.inc()
+            self._c_tuner_evals.inc(plan.tuner.evaluations)
         if self.bucket_shapes:
             part = pad_partition_tiles(
                 plan.partition, bucket_pow2(plan.partition.num_tiles))
@@ -192,10 +236,15 @@ class PlanCache:
             plan = dataclasses.replace(plan, partition=part,
                                        partition_bwd=part_bwd)
         ent = CacheEntry(plan=plan, executor=plan.executor(self.backend))
+        self._h_build.observe(time.perf_counter() - t_build)
+        self.registry.counter(
+            "plan_cache_builds_total", labels={"source": source},
+            desc="plans built, by AggConfig provenance").inc()
         self._plans[key] = ent
         while self.max_plans is not None and len(self._plans) > self.max_plans:
             self._plans.popitem(last=False)
             self.evictions += 1
+            self._c_evict.inc()
         return ent
 
     def _set_config(self, fp: tuple, config: AggConfig) -> None:
@@ -205,6 +254,7 @@ class PlanCache:
                and len(self._configs) > self.max_configs):
             self._configs.popitem(last=False)
             self.config_evictions += 1
+            self._c_cfg_evict.inc()
 
     @property
     def num_plans(self) -> int:

@@ -1,0 +1,80 @@
+"""Validate exported metrics artifacts (docs/observability.md).
+
+    PYTHONPATH=src python tools/validate_metrics.py FILE [FILE ...]
+
+``.json`` files must parse and carry the ``repro.obs/v1`` schema with a
+non-empty ``metrics`` list; ``.prom`` files must pass
+`repro.obs.export.lint_prometheus` (exposition-format invariants:
+TYPE-before-samples, cumulative buckets, ``_count`` == ``+Inf`` bucket).
+Exit non-zero listing every problem — the CI smoke step runs this over
+the files `launch/serve_gnn.py --metrics-out` and `launch/train.py
+--metrics-out` just produced.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def validate_json(path: str) -> list[str]:
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable/unparsable JSON: {e}"]
+    problems = []
+    if doc.get("schema") != "repro.obs/v1":
+        problems.append(f"{path}: schema != repro.obs/v1 "
+                        f"(got {doc.get('schema')!r})")
+    metrics = doc.get("metrics")
+    if not isinstance(metrics, list) or not metrics:
+        problems.append(f"{path}: empty or missing 'metrics' list")
+        return problems
+    for i, m in enumerate(metrics):
+        for key in ("name", "type"):
+            if key not in m:
+                problems.append(f"{path}: metrics[{i}] missing {key!r}")
+        if m.get("type") == "histogram" and "count" not in m:
+            problems.append(f"{path}: histogram {m.get('name')} "
+                            f"missing 'count'")
+    if "context" in doc and not doc["context"].get("git_sha"):
+        problems.append(f"{path}: context present but git_sha empty")
+    return problems
+
+
+def validate_prom(path: str) -> list[str]:
+    from repro.obs import lint_prometheus
+    try:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+    except OSError as e:
+        return [f"{path}: unreadable: {e}"]
+    if not text.strip():
+        return [f"{path}: empty"]
+    return [f"{path}: {p}" for p in lint_prometheus(text)]
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv is not None else sys.argv[1:])
+    if not paths:
+        print("usage: validate_metrics.py FILE [FILE ...]", file=sys.stderr)
+        return 2
+    problems = []
+    for path in paths:
+        if path.endswith(".prom"):
+            problems += validate_prom(path)
+        else:
+            problems += validate_json(path)
+    for p in problems:
+        print(f"[validate_metrics] PROBLEM: {p}")
+    if problems:
+        return 1
+    print(f"[validate_metrics] OK: {len(paths)} file(s) valid")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
