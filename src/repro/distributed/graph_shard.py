@@ -289,10 +289,20 @@ def _model_pieces(cfg, shards: PlanShards, mesh: Optional[Mesh]):
 
 
 def make_sharded_logits_fn(cfg, shards: PlanShards, *,
-                           mesh: Optional[Mesh] = None):
+                           mesh: Optional[Mesh] = None,
+                           registry: Optional[MetricsRegistry] = None):
     """``logits_fn(params, feat) -> (num_nodes, num_classes)`` running the
     full-graph GCN/GIN forward sharded P ways (parent plan node order in
     and out — numerically the single-device `GNNModel.logits`)."""
+    if registry is not None:
+        _record_shard_gauges(registry, shards)
+        nbytes = jnp.dtype(cfg.feat_dtype).itemsize * cfg.in_dim
+        for p, h in enumerate(shards.halo):
+            registry.gauge(
+                "shard_halo_bytes", labels={"shard": p},
+                desc="halo nodes x feature dim x dtype bytes").set(
+                len(h) * nbytes)
+
     mesh, (args_f, args_b), local_logits = _model_pieces(cfg, shards, mesh)
     spec = shards.spec
     n, n_pad = spec.num_nodes, spec.padded_nodes

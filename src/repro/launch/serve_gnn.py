@@ -1,13 +1,26 @@
 """GNN serving driver: replay a synthetic node-prediction request trace.
 
+    # synchronous micro-batcher (the original driver)
     PYTHONPATH=src python -m repro.launch.serve_gnn \
         --num-nodes 20000 --requests 256 --batch-window 16
 
+    # async SLO-aware tier: deadline batcher, 3 SLO tenants, open loop
+    PYTHONPATH=src python -m repro.launch.serve_gnn \
+        --policy deadline --slo-ms 250 --tenants 3 --rate 500
+
+    # sharded executor behind the batcher (needs >= 2 visible devices:
+    # XLA_FLAGS=--xla_force_host_platform_device_count=2)
+    PYTHONPATH=src python -m repro.launch.serve_gnn --policy deadline --shards 2
+
 Builds a power-law resident graph, initializes a GCN/GIN/GAT, then replays
-a Zipf-popularity request trace through the ServingEngine (micro-batcher +
-plan cache) and reports requests/s, p50/p99 latency, batch occupancy and
-plan-cache hit rate.  `--verify N` cross-checks N batched results against
-single-request inference (the end-to-end exactness criterion).
+a Zipf-popularity request trace.  ``--policy micro`` (default) drives the
+synchronous `ServingEngine` (micro-batcher + plan cache) exactly as
+before; ``--policy deadline|clock`` — or any of ``--tenants > 1`` /
+``--shards > 1`` / an explicit ``--slo-ms`` — runs the async
+`AsyncServingEngine` tier instead: bounded admission, SLO classes cycled
+across tenants (gold/silver/bronze over ``--slo-ms``), deadline-aware or
+fixed-window batching, EDF across tenants, and per-tenant
+p50/p99/attainment reporting.
 
 Stats are printed as the JSON metrics exporter's document (one registry
 feeds both stdout and ``--metrics-out``, so they always agree —
@@ -17,22 +30,116 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import time
 
 
 def build_trace(num_nodes: int, requests: int, *, zipf: float = 1.1,
                 hot_fraction: float = 0.05, seed: int = 0):
-    """Power-law seed popularity: ranks Zipf-weighted over a random node
-    permutation, so a small hot set dominates (what makes plan/executor
-    caching pay off in production)."""
+    """Power-law seed popularity (back-compat wrapper over
+    `serving.loadgen.zipf_seeds`): a small hot set dominates the trace,
+    which is what makes plan/executor caching pay off in production."""
+    from repro.serving.loadgen import zipf_seeds
+    return zipf_seeds(num_nodes, requests, zipf=zipf,
+                      hot_fraction=hot_fraction, seed=seed)
+
+
+def _serve_async(args, g, feat, cfg, registry):
+    """Replay the trace through the async SLO-aware tier; returns exit-ok."""
     import numpy as np
-    rng = np.random.default_rng(seed)
-    pool = max(1, int(num_nodes * hot_fraction))
-    nodes = rng.permutation(num_nodes)[:pool]
-    ranks = np.arange(1, pool + 1, dtype=np.float64)
-    p = ranks ** (-zipf)
-    p /= p.sum()
-    return nodes[rng.choice(pool, size=requests, p=p)]
+
+    from repro.obs import registry_to_json, run_context, write_metrics
+    from repro.serving import (AsyncServingEngine, LoadSpec, ServingConfig,
+                               ServingEngine, TenantSpec, build_schedule,
+                               make_sharded_serve_fn, run_schedule,
+                               slo_classes)
+
+    t0 = time.time()
+    if args.shards > 1:
+        serve_fn = make_sharded_serve_fn(g, feat, cfg,
+                                         num_shards=args.shards,
+                                         tune_iters=args.tune_iters,
+                                         registry=registry)
+    else:
+        sync = ServingEngine(
+            g, feat, cfg,
+            serving=ServingConfig(hops=args.hops, max_batch=args.batch_window,
+                                  batch_mode=args.batch_mode,
+                                  bucket_shapes=args.bucket,
+                                  tune_iters=args.tune_iters,
+                                  max_plans=(None if args.max_plans == 0
+                                             else args.max_plans)),
+            registry=registry)
+        serve_fn = sync.serve_batch
+    # warm the pow-2 batch-size buckets so measured batches replay cached
+    # plans/executables instead of paying plan build + XLA compile
+    wrng = np.random.default_rng(args.seed + 1)
+    b = 1
+    while True:
+        serve_fn(wrng.integers(0, g.num_nodes, size=b).tolist())
+        if b >= args.batch_window:
+            break
+        b = min(2 * b, args.batch_window)
+
+    classes = slo_classes(args.slo_ms / 1e3)
+    tenants = [TenantSpec(f"t{i}", serve_fn, slo=classes[i % len(classes)],
+                          max_batch=args.batch_window)
+               for i in range(args.tenants)]
+    engine = AsyncServingEngine(tenants, policy=args.policy,
+                                window=args.slo_ms / 2e3,
+                                registry=registry)
+    print(f"[serve_gnn] async tier: policy={args.policy} shards={args.shards} "
+          f"tenants={[(t.name, t.slo.name) for t in tenants]} "
+          f"(setup {time.time() - t0:.1f}s)")
+
+    spec = LoadSpec(requests=args.requests,
+                    rate_rps=(math.inf if args.rate <= 0 else args.rate),
+                    zipf=args.zipf, tenants=tuple(t.name for t in tenants),
+                    seed=args.seed)
+    res = run_schedule(engine, build_schedule(g.num_nodes, spec))
+    reqs = res["requests_detail"]
+    acc = engine.accounting()
+    summary = engine.summary()
+    engine.close()
+
+    doc = registry_to_json(registry, context=run_context())
+    print(f"[serve_gnn] requests={res['requests']} "
+          f"completed={res['completed']} "
+          f"throughput={res['throughput_rps']:.1f} req/s")
+    for name, s in summary.items():
+        print(f"[serve_gnn]   {name} ({s['slo_class']} {s['slo_ms']:.0f}ms): "
+              f"p50={s['p50_ms']:.1f}ms p99={s['p99_ms']:.1f}ms "
+              f"attainment={s['slo_attainment']:.3f} "
+              f"mean-batch={s['mean_batch']:.1f}")
+    print(json.dumps(doc, indent=2))
+    if args.metrics_out:
+        if args.metrics_format == "json":
+            with open(args.metrics_out, "w", encoding="utf-8") as f:
+                json.dump(doc, f, indent=2)
+                f.write("\n")
+        else:
+            write_metrics(registry, args.metrics_out, "prom")
+        print(f"[serve_gnn] wrote metrics ({args.metrics_format}) -> "
+              f"{args.metrics_out}")
+
+    ok = res["drained"] and acc["outstanding"] == 0
+    ok = ok and acc["submitted"] == acc["completed"] + acc["rejected"]
+    if args.verify > 0:
+        rng = np.random.default_rng(args.seed)
+        done = [r for r in reqs if r.status == "done"]
+        err = 0.0
+        for i in rng.choice(len(done), size=min(args.verify, len(done)),
+                            replace=False):
+            single = np.asarray(serve_fn([done[i].seed]))[0]
+            err = max(err, float((np.abs(single - done[i].result)
+                                  / (1.0 + np.abs(single))).max()))
+        tol = 1e-5 if args.dtype == "float32" else 2e-2
+        ok = ok and err <= tol
+        print(f"[serve_gnn] verify: max|batched - single|/(1+|single|) = "
+              f"{err:.2e} ({'OK' if err <= tol else 'FAIL'} <= {tol:g})")
+    if not ok:
+        print(f"[serve_gnn] FAIL: accounting={acc} drained={res['drained']}")
+    return ok
 
 
 def main(argv=None) -> int:
@@ -65,6 +172,23 @@ def main(argv=None) -> int:
                    default=True, help="disable shape bucketing")
     p.add_argument("--verify", type=int, default=8,
                    help="cross-check N requests vs single-request inference")
+    p.add_argument("--policy", default="micro",
+                   choices=["micro", "deadline", "clock"],
+                   help="micro = synchronous ServingEngine; deadline/clock "
+                        "= async SLO-aware tier (docs/serving.md)")
+    p.add_argument("--slo-ms", type=float, default=None,
+                   help="gold-class SLO budget in ms for the async tier "
+                        "(silver = 2x, bronze = 4x; default 250)")
+    p.add_argument("--tenants", type=int, default=1,
+                   help="number of tenants (SLO classes cycle across them); "
+                        "> 1 implies the async tier")
+    p.add_argument("--shards", type=int, default=1,
+                   help="serve via the P-way sharded halo-exchange forward "
+                        "(> 1 implies the async tier; needs that many "
+                        "visible devices)")
+    p.add_argument("--rate", type=float, default=500.0,
+                   help="offered load in req/s for the async tier "
+                        "(<= 0 = burst: all requests at t=0)")
     p.add_argument("--smoke", action="store_true",
                    help="tiny CI-sized run (overrides --num-nodes, "
                         "--requests, --batch-window, --tune-iters)")
@@ -76,6 +200,12 @@ def main(argv=None) -> int:
                    help="exporter for --metrics-out")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
+    use_async = (args.policy in ("deadline", "clock") or args.tenants > 1
+                 or args.shards > 1 or args.slo_ms is not None)
+    if use_async and args.policy == "micro":
+        args.policy = "deadline"
+    if args.slo_ms is None:
+        args.slo_ms = 250.0
     if args.smoke:
         args.num_nodes = 1500
         args.requests = 24
@@ -86,6 +216,12 @@ def main(argv=None) -> int:
         p.error("--batch-window must be >= 1")
     if args.requests < 1:
         p.error("--requests must be >= 1")
+    if args.tenants < 1:
+        p.error("--tenants must be >= 1")
+    if args.shards < 1:
+        p.error("--shards must be >= 1")
+    if args.slo_ms <= 0:
+        p.error("--slo-ms must be > 0")
 
     import numpy as np
 
@@ -104,6 +240,9 @@ def main(argv=None) -> int:
                     hidden_dim=args.hidden_dim, num_classes=args.classes,
                     num_layers=args.layers, backend=args.backend,
                     feat_dtype=args.dtype)
+    if use_async:
+        return 0 if _serve_async(args, g, feat, cfg, registry) else 1
+
     engine = ServingEngine(
         g, feat, cfg,
         serving=ServingConfig(hops=args.hops, max_batch=args.batch_window,

@@ -1,22 +1,51 @@
-"""GNN inference serving engine.
+"""GNN inference serving.
 
 The paper's preprocessing (extraction, partitioning, design-parameter
 search) is "a one-time cost amortized over many kernel launches" — this
-package is the runtime that does the amortizing: a plan cache keyed by
-graph fingerprints, a micro-batcher that coalesces concurrent node-level
-prediction requests into one batched ego-subgraph inference, and a
-`ServingEngine` front door with latency/throughput accounting.
+package is the runtime that does the amortizing, at two tiers:
+
+* the synchronous tier: a fingerprint-keyed plan cache, a deterministic
+  micro-batcher, and the `ServingEngine` front door with
+  latency/throughput accounting;
+* the async production tier: bounded per-tenant admission
+  (`serving.admission`), deadline-aware continuous batching
+  (`serving.batcher.DeadlineBatcher` — batch close times planned from SLO
+  budgets minus measured compute estimates), EDF scheduling across
+  tenants, and the `AsyncServingEngine` worker that fires batches against
+  a single-device or sharded (`make_sharded_serve_fn`) executor.  The
+  deterministic Zipf load generator lives in `serving.loadgen`.
 """
-from repro.serving.batcher import MicroBatcher, Request
-from repro.serving.engine import ServingConfig, ServingEngine
+from repro.serving.admission import (AdmissionQueue, AsyncRequest, SLOClass,
+                                     slo_classes)
+from repro.serving.batcher import (ClockBatcher, DeadlineBatcher,
+                                   MicroBatcher, Request)
+from repro.serving.engine import (AsyncServingEngine, ServingConfig,
+                                  ServingEngine, TenantSpec,
+                                  make_sharded_serve_fn)
+from repro.serving.loadgen import (Arrival, LoadSpec, build_schedule,
+                                   run_schedule, zipf_seeds)
 from repro.serving.plan_cache import PlanCache, bucket_pow2, graph_fingerprint
 
 __all__ = [
+    "AdmissionQueue",
+    "Arrival",
+    "AsyncRequest",
+    "AsyncServingEngine",
+    "ClockBatcher",
+    "DeadlineBatcher",
+    "LoadSpec",
     "MicroBatcher",
     "PlanCache",
     "Request",
+    "SLOClass",
     "ServingConfig",
     "ServingEngine",
+    "TenantSpec",
     "bucket_pow2",
+    "build_schedule",
     "graph_fingerprint",
+    "make_sharded_serve_fn",
+    "run_schedule",
+    "slo_classes",
+    "zipf_seeds",
 ]

@@ -1,11 +1,23 @@
-"""ServingEngine: node-level GNN prediction against a resident graph.
+"""Serving engines: node-level GNN prediction against resident graphs.
 
-Request path (the subsystem the paper's "one-time cost amortized over many
-kernel launches" premise implies but never builds):
+Two tiers share one request substrate:
 
-    submit(seed) -> MicroBatcher -> k-hop ego-graph union (or disjoint
-    union) -> shape bucketing -> PlanCache (advisor config + partition +
-    jitted forward reuse) -> batched aggregation kernel -> per-seed logits.
+* `ServingEngine` — the synchronous, thread-free micro-batching engine
+  (callers drive the clock explicitly):
+
+      submit(seed) -> MicroBatcher -> k-hop ego-graph union (or disjoint
+      union) -> shape bucketing -> PlanCache (advisor config + partition +
+      jitted forward reuse) -> batched aggregation kernel -> per-seed
+      logits.
+
+* `AsyncServingEngine` — the production tier on top: a bounded admission
+  queue per tenant, a deadline-aware continuous batcher
+  (`serving.batcher.DeadlineBatcher`, compute estimates read from this
+  process's `MetricsRegistry` histograms), an EDF scheduler across
+  tenants, and a single executor worker thread that fires batches against
+  any ``serve_fn(seeds) -> logits`` — a `ServingEngine.serve_batch`
+  bound method for the single-device path, or `make_sharded_serve_fn`
+  for the multi-device halo-exchange forward (`distributed.graph_shard`).
 
 GCN edge values are computed ONCE from the resident graph's degrees and
 sliced into every subgraph, so batched ego inference is numerically
@@ -14,9 +26,11 @@ identical to full-graph inference at the seeds (see `graphs.subgraph`).
 from __future__ import annotations
 
 import dataclasses
+import math
+import threading
 import time
 from collections import OrderedDict
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -26,10 +40,13 @@ from repro.graphs.csr import CSRGraph
 from repro.graphs.subgraph import batch_egos, extract_ego, pad_to_nodes
 from repro.models.gnn import GNNConfig, GNNModel, gcn_edge_values, init_gnn_params
 from repro.obs import MetricsRegistry, SpanTracer, pow2_bounds
-from repro.serving.batcher import MicroBatcher, Request
+from repro.serving.admission import AdmissionQueue, AsyncRequest, SLOClass
+from repro.serving.batcher import (ClockBatcher, DeadlineBatcher,
+                                   MicroBatcher, Request)
 from repro.serving.plan_cache import PlanCache, bucket_pow2
 
-__all__ = ["ServingConfig", "ServingEngine"]
+__all__ = ["AsyncServingEngine", "ServingConfig", "ServingEngine",
+           "TenantSpec", "make_sharded_serve_fn"]
 
 _JIT_CACHE_MAX = 128
 
@@ -117,7 +134,8 @@ class ServingEngine:
     def __init__(self, graph: CSRGraph, feat: np.ndarray, cfg: GNNConfig, *,
                  params=None, key: Optional[jax.Array] = None,
                  serving: Optional[ServingConfig] = None,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 cache: Optional[PlanCache] = None):
         assert feat.shape == (graph.num_nodes, cfg.in_dim), \
             (feat.shape, graph.num_nodes, cfg.in_dim)
         self.graph = graph
@@ -138,14 +156,28 @@ class ServingEngine:
         # one document; see docs/observability.md)
         self.registry = registry if registry is not None else MetricsRegistry()
         self.trace = SpanTracer(self.registry)
-        self.cache = PlanCache(
-            backend=cfg.backend, tune_mode=self.serving.tune_mode,
-            tune_iters=self.serving.tune_iters,
-            max_plans=self.serving.max_plans,
-            max_configs=self.serving.max_configs,
-            bucket_shapes=self.serving.bucket_shapes,
-            feat_dtype=cfg.feat_dtype,
-            registry=self.registry)
+        # ``cache``: optional SHARED PlanCache — multi-tenant serving runs
+        # several engines (one per tenant model) over one fingerprint-keyed
+        # cache, so plans amortize across tenants (plans depend on graph
+        # shape + arch dims, never on weights).  Dtype/backend must agree:
+        # both are part of plan identity.
+        if cache is not None:
+            if cache.feat_dtype != cfg.feat_dtype or cache.backend != cfg.backend:
+                raise ValueError(
+                    f"shared PlanCache policy mismatch: cache has "
+                    f"(backend={cache.backend}, feat_dtype={cache.feat_dtype}),"
+                    f" engine wants ({cfg.backend}, {cfg.feat_dtype})")
+            self.cache = cache
+        else:
+            self.cache = PlanCache(
+                backend=cfg.backend, tune_mode=self.serving.tune_mode,
+                tune_iters=self.serving.tune_iters,
+                max_plans=self.serving.max_plans,
+                max_configs=self.serving.max_configs,
+                bucket_shapes=self.serving.bucket_shapes,
+                feat_dtype=cfg.feat_dtype,
+                registry=self.registry)
+        self._closed = False
         self.batcher = MicroBatcher(
             max_batch=self.serving.max_batch,
             max_wait=(np.inf if self.serving.max_wait is None
@@ -246,6 +278,8 @@ class ServingEngine:
     # ---------------- request API (micro-batched) ----------------
 
     def submit(self, seed: int, now: Optional[float] = None) -> Request:
+        if self._closed:
+            raise RuntimeError("ServingEngine is closed")
         now = time.perf_counter() if now is None else now
         if self.stats.t_first_submit is None:
             self.stats.t_first_submit = now
@@ -272,11 +306,46 @@ class ServingEngine:
             for i, r in enumerate(batch):
                 r.result = out[i]
                 r.t_done = t_done
+                r.status = "done"
                 self.stats.latency.observe(r.latency)
                 self.stats.requests.inc()
             self.stats.t_last_done = t_done
             done.extend(batch)
         return done
+
+    def close(self, drain: bool = True, timeout: Optional[float] = None) -> bool:
+        """Shut the engine down with an explicit drain/timeout contract.
+
+        ``drain=True`` keeps firing forced batches until the queue is
+        empty or ``timeout`` seconds have elapsed; anything still queued
+        after that (or everything, with ``drain=False``) is marked
+        ``status="rejected"`` and counted in
+        ``serve_rejected_total{reason="shutdown"}`` — queued requests are
+        either completed or reported rejected, never dropped silently.
+        Returns True iff every pending request completed.  Idempotent;
+        `submit` raises after the first call.
+        """
+        if self._closed:
+            return self.batcher.pending() == 0
+        self._closed = True
+        t_end = (None if timeout is None
+                 else time.perf_counter() + float(timeout))
+        if drain:
+            while self.batcher.pending():
+                if t_end is not None and time.perf_counter() >= t_end:
+                    break
+                self.step(force=True)
+        leftovers = self.batcher.drain()
+        if leftovers:
+            now = time.perf_counter()
+            c = self.registry.counter(
+                "serve_rejected_total", labels={"reason": "shutdown"},
+                desc="requests rejected at engine shutdown")
+            for r in leftovers:
+                r.status = "rejected"
+                r.t_done = now
+                c.inc()
+        return not leftovers
 
     def run_trace(self, seeds: Sequence[int]) -> list[Request]:
         """Replay a request trace through the micro-batcher (wall clock)."""
@@ -308,3 +377,424 @@ class ServingEngine:
                               else 0.0),
             "cache": self.cache.stats(),
         }
+
+
+# ====================================================================
+#                         async serving tier
+# ====================================================================
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant of the async engine: a model/graph executor plus its
+    admission policy.
+
+    ``serve_fn(seeds) -> (len(seeds), C)`` is the tenant's executor — a
+    bound `ServingEngine.serve_batch` (single device, per-tenant ego
+    extraction + shared `PlanCache`), the result of
+    `make_sharded_serve_fn` (multi-device halo-exchange forward), or any
+    callable with that contract (tests use stubs).
+    """
+
+    name: str
+    serve_fn: Callable[[Sequence[int]], np.ndarray]
+    slo: SLOClass = SLOClass("silver", 0.5)
+    max_batch: int = 32            # batch size cap (pow2 bucket cap)
+    queue_cap: int = 4096          # admission bound; beyond it -> reject
+
+
+class _TenantState:
+    """Engine-internal per-tenant state: admission queue, batcher, and the
+    registry instruments (all labelled ``{tenant=...}``)."""
+
+    def __init__(self, spec: TenantSpec, batcher, registry: MetricsRegistry):
+        self.spec = spec
+        self.batcher = batcher
+        self.queue = AdmissionQueue(spec.name, capacity=spec.queue_cap,
+                                    slo=spec.slo)
+        lab = {"tenant": spec.name}
+        self.g_depth = registry.gauge(
+            "serve_queue_depth", labels=lab,
+            desc="requests admitted but not yet fired")
+        self.c_submitted = registry.counter(
+            "serve_submitted_total", labels=lab,
+            desc="submit() calls (admitted + rejected)")
+        self.c_completed = registry.counter(
+            "serve_completed_total", labels=lab,
+            desc="requests completed with a result")
+        self.c_slo_met = registry.counter(
+            "serve_slo_met_total", labels=lab,
+            desc="completions within the tenant's SLO budget")
+        self.c_slo_missed = registry.counter(
+            "serve_slo_missed_total", labels=lab,
+            desc="completions past the tenant's SLO budget")
+        self.h_latency = registry.histogram(
+            "serve_request_latency_seconds", labels=lab,
+            desc="submit -> completion latency")
+        self.h_queue_wait = registry.histogram(
+            "serve_queue_wait_seconds", labels=lab,
+            desc="submit -> batch-fire queue wait")
+        self.h_compute = registry.histogram(
+            "serve_batch_compute_seconds", labels=lab,
+            desc="serve_fn wall time per fired batch (feeds the deadline "
+                 "batcher's compute estimate)")
+        self.h_batch = registry.histogram(
+            "serve_batch_size", labels=lab, unit="",
+            bounds=pow2_bounds(4096), desc="requests per fired batch")
+        self._c_rejected = {}
+        self._registry = registry
+        self._lab = lab
+
+    def c_rejected(self, reason: str):
+        c = self._c_rejected.get(reason)
+        if c is None:
+            c = self._registry.counter(
+                "serve_rejected_total", labels={**self._lab, "reason": reason},
+                desc="requests rejected, by reason")
+            self._c_rejected[reason] = c
+        return c
+
+
+class AsyncServingEngine:
+    """Async, SLO-aware, multi-tenant serving front door.
+
+    Request path::
+
+        submit(seed, tenant) -> AdmissionQueue (bounded; rejects on
+        overflow/shutdown) -> per-tenant DeadlineBatcher (planned close =
+        tightest deadline - measured compute estimate - margin) -> EDF
+        pick across tenants -> worker thread -> tenant serve_fn ->
+        AsyncRequest.complete
+
+    One worker thread executes batches serially (modelling one device's
+    serving lane); admission, batching state and scheduling all live
+    under a single condition variable, so the cross-tenant pick is always
+    made against a consistent snapshot.  Per-tenant isolation comes from
+    earliest-deadline-first: a tenant flooding its (bounded) queue can
+    delay another tenant by at most one in-flight batch, because the
+    moment the other tenant's batch is due its earlier deadline wins the
+    pick.
+
+    ``policy="deadline"`` (default) uses `DeadlineBatcher` with a compute
+    estimate read live from each tenant's
+    ``serve_batch_compute_seconds`` histogram (p90); ``policy="clock"``
+    is the fixed-window baseline (`ClockBatcher`) the benchmark compares
+    against.
+
+    Shutdown contract (`close`): every admitted request is either
+    completed or reported rejected — never dropped.  With
+    ``drain=True`` the worker force-closes and executes remaining
+    batches (EDF order) before exiting; a ``timeout`` bounds the wait,
+    after which still-queued requests are rejected with reason
+    ``"shutdown"``.  With ``drain=False`` queued requests are rejected
+    immediately (the in-flight batch, if any, still completes).
+    """
+
+    def __init__(self, tenants: Sequence[TenantSpec], *,
+                 policy: str = "deadline", window: float = 0.02,
+                 margin: float = 0.002, idle_gap: Optional[float] = 0.008,
+                 registry: Optional[MetricsRegistry] = None,
+                 start: bool = True):
+        if not tenants:
+            raise ValueError("need at least one TenantSpec")
+        if policy not in ("deadline", "clock"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.policy = policy
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._cond = threading.Condition()
+        self._tenants: "OrderedDict[str, _TenantState]" = OrderedDict()
+        for spec in tenants:
+            if spec.name in self._tenants:
+                raise ValueError(f"duplicate tenant {spec.name!r}")
+            self._tenants[spec.name] = ts = _TenantState(
+                spec, None, self.registry)
+            if policy == "deadline":
+                # est_fn reads the tenant's measured compute histogram at
+                # decision time — the batcher plans with live data
+                ts.batcher = DeadlineBatcher(
+                    max_batch=spec.max_batch, margin=margin,
+                    idle_gap=idle_gap,
+                    est_fn=(lambda h=ts.h_compute:
+                            h.percentile(90) if h.count else 0.0))
+            else:
+                ts.batcher = ClockBatcher(max_batch=spec.max_batch,
+                                          window=window)
+        self._default = next(iter(self._tenants))
+        self._next_rid = 0
+        self._outstanding = 0          # admitted, not yet terminal
+        self._closing = False
+        self._abort = False
+        self._worker_done = False
+        self._thread = threading.Thread(
+            target=self._worker, name="serve-worker", daemon=True)
+        if start:
+            self._thread.start()
+
+    # ---------------- submission ----------------
+
+    def submit(self, seed: int, tenant: Optional[str] = None,
+               now: Optional[float] = None) -> AsyncRequest:
+        """Admit one request; returns immediately.  The request is
+        rejected (terminal, with a reason) rather than raising when the
+        tenant queue is full or the engine is shutting down."""
+        name = self._default if tenant is None else tenant
+        ts = self._tenants[name]            # KeyError = caller bug
+        now = time.perf_counter() if now is None else now
+        with self._cond:
+            req = AsyncRequest(rid=self._next_rid, tenant=name,
+                               seed=int(seed), t_submit=now,
+                               deadline=now + ts.spec.slo.slo_s)
+            self._next_rid += 1
+            ts.c_submitted.inc()
+            reason = ts.queue.admit(req, ts.batcher.pending(),
+                                    self._closing, now)
+            if reason is not None:
+                ts.c_rejected(reason).inc()
+                return req
+            ts.batcher.put(req, now)
+            self._outstanding += 1
+            ts.g_depth.set(ts.batcher.pending())
+            self._cond.notify_all()
+        return req
+
+    # ---------------- worker ----------------
+
+    def _pick_due_locked(self, now: float):
+        """EDF among tenants whose batch is due; else the earliest planned
+        close time to sleep toward."""
+        best, best_dl, wake = None, math.inf, None
+        for ts in self._tenants.values():
+            if not ts.batcher.pending():
+                continue
+            if ts.batcher.due(now):
+                dl = ts.batcher.oldest_deadline()
+                if dl < best_dl:
+                    best, best_dl = ts, dl
+            else:
+                ca = ts.batcher.close_at(now)
+                wake = ca if wake is None else min(wake, ca)
+        return best, wake
+
+    def _pick_any_locked(self):
+        """Drain path: the pending tenant with the earliest deadline,
+        ignoring close times."""
+        best, best_dl = None, math.inf
+        for ts in self._tenants.values():
+            if ts.batcher.pending():
+                dl = ts.batcher.oldest_deadline()
+                if dl < best_dl:
+                    best, best_dl = ts, dl
+        return best
+
+    def _reject_queued_locked(self, reason: str, now: float) -> int:
+        """Reject everything still queued (abort/shutdown-timeout path)."""
+        n = 0
+        for ts in self._tenants.values():
+            while ts.batcher.pending():
+                for r in ts.batcher.pop(now):
+                    r.reject(reason, now)
+                    ts.queue.on_rejected()
+                    ts.c_rejected(reason).inc()
+                    n += 1
+            ts.g_depth.set(0)
+        self._outstanding -= n
+        if n:
+            self._cond.notify_all()
+        return n
+
+    def _worker(self):
+        try:
+            while True:
+                with self._cond:
+                    ts, batch = None, None
+                    while batch is None:
+                        now = time.perf_counter()
+                        if self._abort:
+                            self._reject_queued_locked("shutdown", now)
+                            return
+                        if self._closing:
+                            ts = self._pick_any_locked()
+                            if ts is None:
+                                return
+                            batch = ts.batcher.pop(now)
+                            break
+                        ts, wake = self._pick_due_locked(now)
+                        if ts is not None:
+                            batch = ts.batcher.pop(now)
+                            break
+                        self._cond.wait(
+                            timeout=None if wake is None
+                            else max(wake - now, 1e-4))
+                    ts.g_depth.set(ts.batcher.pending())
+                self._run_batch(ts, batch)
+        finally:
+            with self._cond:
+                self._worker_done = True
+                self._cond.notify_all()
+
+    def _run_batch(self, ts: _TenantState, batch: list) -> None:
+        t0 = time.perf_counter()
+        for r in batch:
+            ts.h_queue_wait.observe(max(t0 - r.t_submit, 0.0))
+        try:
+            out = np.asarray(ts.spec.serve_fn([r.seed for r in batch]))
+        except Exception:                                  # noqa: BLE001
+            # executor failure is a terminal REJECTION for the whole
+            # batch, not a dropped batch — accounting stays exact
+            now = time.perf_counter()
+            with self._cond:
+                for r in batch:
+                    r.reject("error", now)
+                    ts.queue.on_rejected()
+                    ts.c_rejected("error").inc()
+                self._outstanding -= len(batch)
+                self._cond.notify_all()
+            return
+        t1 = time.perf_counter()
+        ts.h_compute.observe(t1 - t0)
+        ts.h_batch.observe(len(batch))
+        slo_s = ts.spec.slo.slo_s
+        with self._cond:
+            for i, r in enumerate(batch):
+                r.complete(out[i], t1)
+                ts.queue.on_completed()
+                ts.c_completed.inc()
+                lat = t1 - r.t_submit
+                ts.h_latency.observe(lat)
+                (ts.c_slo_met if lat <= slo_s else ts.c_slo_missed).inc()
+            self._outstanding -= len(batch)
+            self._cond.notify_all()
+
+    # ---------------- lifecycle ----------------
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every admitted request is terminal (the batchers'
+        own close policies keep firing — this does NOT force-close).
+        Returns False on timeout."""
+        t_end = (None if timeout is None
+                 else time.perf_counter() + float(timeout))
+        with self._cond:
+            while self._outstanding > 0:
+                if self._worker_done:
+                    return self._outstanding == 0
+                rem = (None if t_end is None
+                       else t_end - time.perf_counter())
+                if rem is not None and rem <= 0:
+                    return False
+                self._cond.wait(timeout=rem if rem is not None else 0.5)
+        return True
+
+    def close(self, drain: bool = True,
+              timeout: Optional[float] = None) -> bool:
+        """Shut down; see the class docstring for the contract.  Returns
+        True iff every admitted request completed or was rejected before
+        return (False = timed out with the worker still busy; queued
+        requests were rejected, the in-flight batch finishes on the
+        daemon worker)."""
+        with self._cond:
+            self._closing = True
+            if not drain:
+                self._abort = True
+            self._cond.notify_all()
+        if self._thread.ident is None:        # start=False, never ran
+            with self._cond:
+                self._reject_queued_locked("shutdown", time.perf_counter())
+            return True
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            with self._cond:
+                self._abort = True
+                self._reject_queued_locked("shutdown", time.perf_counter())
+                self._cond.notify_all()
+            self._thread.join(0.5)
+            return False
+        return True
+
+    # ---------------- introspection ----------------
+
+    @property
+    def tenants(self) -> tuple:
+        return tuple(self._tenants)
+
+    def accounting(self, tenant: Optional[str] = None) -> dict:
+        """Exact request accounting — the invariant the concurrency tests
+        assert: ``submitted == completed + rejected + outstanding``."""
+        names = [tenant] if tenant is not None else list(self._tenants)
+        sub = comp = rej = 0
+        with self._cond:
+            for n in names:
+                q = self._tenants[n].queue
+                sub += q.submitted
+                comp += q.completed
+                rej += q.rejected
+            return {"submitted": sub, "completed": comp, "rejected": rej,
+                    "outstanding": sub - comp - rej}
+
+    def summary(self) -> dict:
+        """Per-tenant serving summary (latency percentiles from the
+        bounded registry histograms, SLO attainment from the met/missed
+        counters)."""
+        out = {}
+        for name, ts in self._tenants.items():
+            met = ts.c_slo_met.value
+            missed = ts.c_slo_missed.value
+            done = met + missed
+            out[name] = {
+                "slo_class": ts.spec.slo.name,
+                "slo_ms": ts.spec.slo.slo_s * 1e3,
+                **self.accounting(name),
+                "p50_ms": ts.h_latency.percentile(50) * 1e3,
+                "p99_ms": ts.h_latency.percentile(99) * 1e3,
+                "slo_attainment": met / done if done else float("nan"),
+                "mean_batch": (ts.h_batch.mean if ts.h_batch.count
+                               else 0.0),
+                "batches": ts.h_batch.count,
+            }
+        return out
+
+
+def make_sharded_serve_fn(graph: CSRGraph, feat: np.ndarray, cfg: GNNConfig,
+                          *, num_shards: int, params=None,
+                          key: Optional[jax.Array] = None,
+                          tune_iters: int = 4,
+                          registry: Optional[MetricsRegistry] = None):
+    """Build a ``serve_fn(seeds) -> (len(seeds), C)`` that answers
+    requests from the multi-device halo-exchange forward
+    (`distributed.graph_shard.make_sharded_logits_fn`) — where the
+    micro-batcher and the sharded executor meet.
+
+    The resident graph is planned ONCE (`plan_for` + `Plan.shards`) and
+    every fired batch runs one sharded full-graph forward, slicing out
+    the requested seed rows — numerically identical to single-device
+    full-graph inference.  Requires ``num_shards`` visible devices
+    (`shard_mesh` raises with the XLA_FLAGS hint otherwise).
+    """
+    from repro.core.advisor import plan_for
+    from repro.distributed.graph_shard import make_sharded_logits_fn
+
+    if cfg.arch == "gcn":
+        src_graph, src_vals = gcn_edge_values(graph)
+    elif cfg.arch == "gin":
+        src_graph, src_vals = graph, None
+    else:
+        raise ValueError(
+            f"sharded serving supports gcn/gin (static edge values), "
+            f"got {cfg.arch!r}")
+    plan = plan_for(src_graph, arch=cfg.arch, in_dim=cfg.in_dim,
+                    hidden_dim=cfg.hidden_dim, num_layers=cfg.num_layers,
+                    edge_vals=src_vals, tune_iters=tune_iters,
+                    feat_dtype=cfg.feat_dtype)
+    shards = plan.shards(num_shards)
+    logits_fn = make_sharded_logits_fn(cfg, shards, registry=registry)
+    if params is None:
+        params = init_gnn_params(
+            cfg, key if key is not None else jax.random.PRNGKey(0))
+    feat_dev = jnp.asarray(np.ascontiguousarray(feat, dtype=np.float32))
+
+    def serve_fn(seeds: Sequence[int]) -> np.ndarray:
+        out = np.asarray(jax.block_until_ready(logits_fn(params, feat_dev)))
+        return out[np.asarray(list(seeds), dtype=np.int64)]
+
+    serve_fn.plan = plan          # introspection for tests/benchmarks
+    serve_fn.shards = shards
+    serve_fn.params = params
+    return serve_fn

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 import time
 from collections import OrderedDict
 from typing import Any, Callable, Optional
@@ -147,6 +148,12 @@ class PlanCache:
         # counts are pow2-padded alongside the forward ones so the training
         # step's jit cache buckets both directions.
         self.with_backward = with_backward
+        # one cache may now be SHARED across serving tenants (engines),
+        # and the async tier's worker thread races test/driver threads on
+        # it — every lookup/mutation runs under this reentrant lock.
+        # Plan builds happen inside it too: serializing duplicate builds
+        # of the same key is the behavior a cache wants anyway.
+        self._lock = threading.RLock()
         self._plans: "OrderedDict[tuple, CacheEntry]" = OrderedDict()
         self._configs: "OrderedDict[tuple, AggConfig]" = OrderedDict()
         self.exact_hits = 0
@@ -185,6 +192,15 @@ class PlanCache:
     def get_or_build(self, g: CSRGraph, *, arch: str, in_dim: int,
                      hidden_dim: int, num_layers: int,
                      edge_vals: Optional[np.ndarray] = None) -> CacheEntry:
+        with self._lock:
+            return self._get_or_build_locked(
+                g, arch=arch, in_dim=in_dim, hidden_dim=hidden_dim,
+                num_layers=num_layers, edge_vals=edge_vals)
+
+    def _get_or_build_locked(self, g: CSRGraph, *, arch: str, in_dim: int,
+                             hidden_dim: int, num_layers: int,
+                             edge_vals: Optional[np.ndarray] = None
+                             ) -> CacheEntry:
         arch_key = (arch, in_dim, hidden_dim, num_layers,
                     self.feat_dtype) + (
             ("bwd",) if self.with_backward else ())
@@ -248,23 +264,30 @@ class PlanCache:
         return ent
 
     def _set_config(self, fp: tuple, config: AggConfig) -> None:
-        self._configs[fp] = config
-        self._configs.move_to_end(fp)
-        while (self.max_configs is not None
-               and len(self._configs) > self.max_configs):
-            self._configs.popitem(last=False)
-            self.config_evictions += 1
-            self._c_cfg_evict.inc()
+        with self._lock:
+            self._configs[fp] = config
+            self._configs.move_to_end(fp)
+            while (self.max_configs is not None
+                   and len(self._configs) > self.max_configs):
+                self._configs.popitem(last=False)
+                self.config_evictions += 1
+                self._c_cfg_evict.inc()
 
     @property
     def num_plans(self) -> int:
-        return len(self._plans)
+        with self._lock:
+            return len(self._plans)
 
     @property
     def num_configs(self) -> int:
-        return len(self._configs)
+        with self._lock:
+            return len(self._configs)
 
     def stats(self) -> dict:
+        with self._lock:
+            return self._stats_locked()
+
+    def _stats_locked(self) -> dict:
         total = self.exact_hits + self.config_hits + self.misses
         hits = self.exact_hits + self.config_hits
         return {

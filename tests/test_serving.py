@@ -225,3 +225,53 @@ def test_engine_disjoint_mode_matches_union(rng):
                                                   batch_mode=mode))
         outs.append(eng.serve_batch(seeds))
     np.testing.assert_allclose(outs[0], outs[1], atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------------- shutdown contract
+
+def _small_engine(rng, max_batch=4):
+    g = random_power_law(200, 4.0, seed=9)
+    cfg = GNNConfig(arch="gcn", in_dim=6, hidden_dim=6, num_classes=3,
+                    num_layers=2, backend="xla")
+    feat = rng.standard_normal((g.num_nodes, 6)).astype(np.float32)
+    return ServingEngine(g, feat, cfg,
+                         serving=ServingConfig(max_batch=max_batch,
+                                               tune_iters=2))
+
+
+def test_engine_close_drains_pending(rng):
+    eng = _small_engine(rng)
+    reqs = [eng.submit(i) for i in range(7)]
+    assert eng.close(drain=True) is True
+    assert all(r.status == "done" and r.result is not None for r in reqs)
+    assert eng.batcher.pending() == 0
+
+
+def test_engine_close_without_drain_rejects(rng):
+    eng = _small_engine(rng)
+    reqs = [eng.submit(i) for i in range(5)]
+    assert eng.close(drain=False) is False
+    assert all(r.status == "rejected" and r.t_done >= r.t_submit
+               for r in reqs)
+    # never dropped silently: rejections are counted in the registry
+    c = eng.registry.counter("serve_rejected_total",
+                             labels={"reason": "shutdown"})
+    assert c.value == 5
+
+
+def test_engine_close_is_idempotent_and_blocks_submit(rng):
+    eng = _small_engine(rng)
+    eng.submit(1)
+    assert eng.close(drain=True) is True
+    assert eng.close() is True                  # second close: no-op
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit(2)
+
+
+def test_engine_close_timeout_rejects_leftovers(rng):
+    eng = _small_engine(rng, max_batch=1)
+    reqs = [eng.submit(i) for i in range(6)]
+    # timeout=0: no drain budget at all -> everything queued is rejected
+    assert eng.close(drain=True, timeout=0.0) is False
+    assert all(r.status in ("done", "rejected") for r in reqs)
+    assert sum(r.status == "rejected" for r in reqs) >= 1

@@ -3,12 +3,16 @@
     PYTHONPATH=src python tools/validate_metrics.py FILE [FILE ...]
 
 ``.json`` files must parse and carry the ``repro.obs/v1`` schema with a
-non-empty ``metrics`` list; ``.prom`` files must pass
-`repro.obs.export.lint_prometheus` (exposition-format invariants:
-TYPE-before-samples, cumulative buckets, ``_count`` == ``+Inf`` bucket).
-Exit non-zero listing every problem — the CI smoke step runs this over
-the files `launch/serve_gnn.py --metrics-out` and `launch/train.py
---metrics-out` just produced.
+non-empty ``metrics`` list; files named ``BENCH_serve*.json`` are instead
+checked against the ``repro.bench_serve/v1`` benchmark document
+(`benchmarks.bench_serve --json-out`): run-context stamp, non-empty
+``configs`` with the full per-cell key set, and a ``comparison`` verdict;
+``.prom`` files must pass `repro.obs.export.lint_prometheus`
+(exposition-format invariants: TYPE-before-samples, cumulative buckets,
+``_count`` == ``+Inf`` bucket).  Exit non-zero listing every problem —
+the CI smoke steps run this over the files `launch/serve_gnn.py
+--metrics-out`, `launch/train.py --metrics-out` and
+`benchmarks.bench_serve --json-out` just produced.
 """
 from __future__ import annotations
 
@@ -17,6 +21,7 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def validate_json(path: str) -> list[str]:
@@ -45,6 +50,33 @@ def validate_json(path: str) -> list[str]:
     return problems
 
 
+def validate_bench_serve(path: str) -> list[str]:
+    from benchmarks.bench_serve import CONFIG_KEYS, SCHEMA
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable/unparsable JSON: {e}"]
+    problems = []
+    if doc.get("schema") != SCHEMA:
+        problems.append(f"{path}: schema != {SCHEMA} "
+                        f"(got {doc.get('schema')!r})")
+    if not doc.get("context", {}).get("git_sha"):
+        problems.append(f"{path}: missing run context git_sha stamp")
+    configs = doc.get("configs")
+    if not isinstance(configs, list) or not configs:
+        problems.append(f"{path}: empty or missing 'configs' list")
+        return problems
+    for i, c in enumerate(configs):
+        missing = [k for k in CONFIG_KEYS if k not in c]
+        if missing:
+            problems.append(f"{path}: configs[{i}] missing {missing}")
+    comp = doc.get("comparison")
+    if not isinstance(comp, dict) or "pass" not in comp:
+        problems.append(f"{path}: missing 'comparison' verdict")
+    return problems
+
+
 def validate_prom(path: str) -> list[str]:
     from repro.obs import lint_prometheus
     try:
@@ -66,6 +98,8 @@ def main(argv=None) -> int:
     for path in paths:
         if path.endswith(".prom"):
             problems += validate_prom(path)
+        elif os.path.basename(path).startswith("BENCH_serve"):
+            problems += validate_bench_serve(path)
         else:
             problems += validate_json(path)
     for p in problems:
