@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, load_replica, time_fn
+from benchmarks.common import emit, load_replica, measure_fn
 from repro.core.extractor import extract_graph_props
 from repro.core.model import AggConfig, KernelModel
 from repro.core.partition import partition_graph, partition_stats
@@ -37,11 +37,13 @@ def run():
 
         seg = jax.jit(lambda f: ref.segment_aggregate_ref(
             f, cols_j, rows_j, ev, g.num_nodes))
-        t_seg = time_fn(seg, feat)
+        m_seg = measure_fn(seg, feat)
+        t_seg = m_seg.p50
 
         edge = jax.jit(lambda f: ref.edge_centric_aggregate_ref(
             f, cols_j, rows_j, ev, g.num_nodes))
-        t_edge = time_fn(edge, feat)
+        m_edge = measure_fn(edge, feat)
+        t_edge = m_edge.p50
 
         degs = g.degrees
         md = max(int(degs.max()), 1)
@@ -54,12 +56,14 @@ def run():
         nbrs_j, mask_j = jnp.asarray(nbrs), jnp.asarray(mask)
         node = jax.jit(lambda f: ref.node_centric_aggregate_ref(
             f, nbrs_j, mask_j, mask_j, g.num_nodes))
-        t_node = time_fn(node, feat)
+        m_node = measure_fn(node, feat)
+        t_node = m_node.p50
 
         p = partition_graph(g, gs=16, gpt=16, ont=8, src_win=256)
         sched = DeviceSchedule(p)
         grp = jax.jit(lambda f: aggregate(f, sched, backend="xla"))
-        t_grp = time_fn(grp, feat)
+        m_grp = measure_fn(grp, feat)
+        t_grp = m_grp.p50
 
         props = extract_graph_props(g, detect_communities=False)
         cfg = AggConfig(gs=16, gpt=16, ont=8, src_win=256)
@@ -68,11 +72,14 @@ def run():
         emit(f"agg/{name}/group", t_grp * 1e6,
              f"speedup_vs_edge={t_edge / t_grp:.2f}x "
              f"vs_node={t_node / t_grp:.2f}x vs_segsum={t_seg / t_grp:.2f}x "
-             f"tpu_model_us={tpu * 1e6:.1f} occ={stats['slot_occupancy']:.2f}")
-        emit(f"agg/{name}/segsum_dgl_analogue", t_seg * 1e6, "")
-        emit(f"agg/{name}/edge_centric_pyg_analogue", t_edge * 1e6, "")
+             f"tpu_model_us={tpu * 1e6:.1f} occ={stats['slot_occupancy']:.2f}",
+             stats=m_grp)
+        emit(f"agg/{name}/segsum_dgl_analogue", t_seg * 1e6, "",
+             stats=m_seg)
+        emit(f"agg/{name}/edge_centric_pyg_analogue", t_edge * 1e6, "",
+             stats=m_edge)
         emit(f"agg/{name}/node_centric", t_node * 1e6,
-             f"max_deg_pad={md}")
+             f"max_deg_pad={md}", stats=m_node)
 
         # bf16 vs f32 on the SAME schedule: measured latency plus modeled
         # DMA bytes — the memory-bound term halves with bytes_feat=2
@@ -81,7 +88,8 @@ def run():
         feat16 = feat.astype(jnp.bfloat16)
         grp16 = jax.jit(lambda f: aggregate(f, sched, backend="xla",
                                             out_dtype=jnp.bfloat16))
-        t_grp16 = time_fn(grp16, feat16)
+        m_grp16 = measure_fn(grp16, feat16)
+        t_grp16 = m_grp16.p50
         term32 = km.terms(props, DIM, cfg, tiles=p.num_tiles)
         term16 = km.terms(props, DIM, cfg16, tiles=p.num_tiles)
         tpu16 = term16["latency"]
@@ -91,7 +99,7 @@ def run():
              f"model_bytes_bf16={term16['bytes']:.0f} "
              f"bytes_ratio={term16['bytes'] / term32['bytes']:.2f} "
              f"tpu_model_us_bf16={tpu16 * 1e6:.1f} "
-             f"tpu_model_speedup={tpu / tpu16:.2f}x")
+             f"tpu_model_speedup={tpu / tpu16:.2f}x", stats=m_grp16)
 
 
 if __name__ == "__main__":

@@ -26,7 +26,7 @@ def run(smoke: bool = True):
     import jax.numpy as jnp
     import numpy as np
 
-    from benchmarks.common import emit, time_fn
+    from benchmarks.common import emit, measure_fn
     from repro.graphs.csr import random_power_law
     from repro.models.gnn import GNNConfig, build_gnn, make_gnn_train_step
     from repro.obs import MetricsRegistry, SpanTracer
@@ -83,8 +83,9 @@ def run(smoke: bool = True):
                     "bench_train_step_seconds",
                     labels={"case": f"{arch}/{backend}/{feat_dtype}"},
                     desc="per-iteration step wall time")
-                t = time_fn(one_step, warmup=1, iters=iters,
-                            observe=h.observe)
+                m = measure_fn(one_step, warmup=1, iters=iters,
+                               observe=h.observe)
+                t = m.p50
                 if backend == "xla" and feat_dtype == "float32":
                     ref_step = t
                     speed = ""
@@ -103,7 +104,7 @@ def run(smoke: bool = True):
                      f"bwd_tiles={pb.num_tiles if pb is not None else '-'};"
                      f"p50_us={h.percentile(50) * 1e6:.1f};"
                      f"p99_us={h.percentile(99) * 1e6:.1f};"
-                     f"model_bytes={mbytes:.0f}{speed}")
+                     f"model_bytes={mbytes:.0f}{speed}", stats=m)
 
     # instrumentation overhead: what one traced span + a handful of
     # histogram observes cost per trained step, relative to the gcn/xla/f32

@@ -1,15 +1,12 @@
 """Shared benchmark helpers: timing, dataset loading, output formatting."""
 from __future__ import annotations
 
-import time
 from typing import Callable, Optional
 
-import jax
-import numpy as np
-
 from repro.obs import run_context
+from repro.obs.profile import Measurement, measure
 
-__all__ = ["time_fn", "emit", "load_replica", "run_context",
+__all__ = ["measure_fn", "time_fn", "emit", "load_replica", "run_context",
            "start_capture", "take_captured_rows"]
 
 # When capture is active (benchmarks.run --json-dir), every emit() row is
@@ -30,33 +27,54 @@ def take_captured_rows() -> list:
     return rows
 
 
+def measure_fn(fn: Callable, *args, warmup: Optional[int] = 2,
+               iters: int = 5,
+               observe: Optional[Callable[[float], None]] = None,
+               ) -> Measurement:
+    """Full `Measurement` (p50/p90/min/spread) of a jax function through the
+    `repro.obs.profile` harness — every sample closes with
+    ``block_until_ready``, so timings are honest under async dispatch.
+
+    ``observe`` receives each post-warmup sample — pass
+    ``Histogram.observe`` to get p50/p99 from the same samples the stats
+    are computed from (docs/observability.md).  Pass the result to
+    ``emit(..., stats=m)`` so the row carries its own noise estimate for
+    the baseline gate (`tools/bench_compare.py`)."""
+    m = measure(fn, *args, warmup=warmup, iters=iters)
+    if observe is not None:
+        for s in m.samples:
+            observe(s)
+    return m
+
+
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
             observe: Optional[Callable[[float], None]] = None) -> float:
     """Median wall-time (s) of a jax function (block_until_ready).
 
-    ``observe`` receives each post-warmup iteration time — pass
-    ``Histogram.observe`` to get p50/p99 from the same samples the median
-    is computed from (docs/observability.md)."""
-    for _ in range(warmup):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        ts.append(time.perf_counter() - t0)
-        if observe is not None:
-            observe(ts[-1])
-    return float(np.median(ts))
+    Back-compat wrapper over `measure_fn` — callers that want the full
+    distribution (for noise-aware baselines) use `measure_fn` directly."""
+    return measure_fn(fn, *args, warmup=warmup, iters=iters,
+                      observe=observe).p50
 
 
-def emit(name: str, us_per_call: float, derived: str = ""):
-    """CSV contract: name,us_per_call,derived."""
+def emit(name: str, us_per_call: float, derived: str = "", *,
+         stats: Optional[Measurement] = None, **fields):
+    """CSV contract: name,us_per_call,derived (stdout is the interface).
+
+    Captured JSON rows carry more: ``stats=`` merges the measurement's
+    p50/p90/min/mean/iters (microseconds) into the row so persisted
+    baselines know each metric's run-to-run spread, and extra numeric
+    ``fields`` (e.g. ``p90_us=...`` from a latency histogram) ride along."""
     print(f"{name},{us_per_call:.1f},{derived}")
     if _captured is not None:
-        _captured.append({"name": name, "us_per_call": float(us_per_call),
-                          "derived": derived})
+        row = {"name": name, "us_per_call": float(us_per_call),
+               "derived": derived}
+        if stats is not None:
+            row.update(stats.to_row())
+        for k, v in fields.items():
+            if v is not None:
+                row[k] = float(v) if isinstance(v, (int, float)) else v
+        _captured.append(row)
 
 
 def load_replica(name: str, *, max_nodes: int = 4000, seed: int = 0):

@@ -71,7 +71,8 @@ def main(argv=None) -> int:
             short = module.rsplit(".", 1)[-1]
             path = os.path.join(args.json_dir, f"BENCH_{short}.json")
             with open(path, "w") as f:
-                json.dump({"section": title, "module": module, "ok": ok,
+                json.dump({"schema": "repro.bench/v1",
+                           "section": title, "module": module, "ok": ok,
                            "wall_s": round(wall, 2),
                            "context": common.run_context(),
                            "rows": common.take_captured_rows()}, f, indent=1)

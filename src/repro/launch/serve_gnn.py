@@ -44,7 +44,17 @@ def build_trace(num_nodes: int, requests: int, *, zipf: float = 1.1,
                       hot_fraction=hot_fraction, seed=seed)
 
 
-def _serve_async(args, g, feat, cfg, registry):
+def _write_trace(args, tracer) -> None:
+    """--trace-out: span records as a Chrome/Perfetto trace JSON (open in
+    ui.perfetto.dev or chrome://tracing — docs/observability.md)."""
+    if not args.trace_out:
+        return
+    from repro.obs import run_context, write_chrome_trace
+    write_chrome_trace(args.trace_out, tracer, context=run_context())
+    print(f"[serve_gnn] wrote Chrome trace -> {args.trace_out}")
+
+
+def _serve_async(args, g, feat, cfg, registry, tracer):
     """Replay the trace through the async SLO-aware tier; returns exit-ok."""
     import numpy as np
 
@@ -56,10 +66,17 @@ def _serve_async(args, g, feat, cfg, registry):
 
     t0 = time.time()
     if args.shards > 1:
-        serve_fn = make_sharded_serve_fn(g, feat, cfg,
-                                         num_shards=args.shards,
-                                         tune_iters=args.tune_iters,
-                                         registry=registry)
+        sharded_fn = make_sharded_serve_fn(g, feat, cfg,
+                                           num_shards=args.shards,
+                                           tune_iters=args.tune_iters,
+                                           registry=registry)
+
+        def serve_fn(seeds):
+            # the sharded path has no engine-internal spans; one span per
+            # batch keeps the Chrome trace's serve track populated
+            with tracer.span("serve_sharded", block=True,
+                             batch=len(seeds)) as sp:
+                return sp.sync(sharded_fn(seeds))
     else:
         sync = ServingEngine(
             g, feat, cfg,
@@ -69,7 +86,7 @@ def _serve_async(args, g, feat, cfg, registry):
                                   tune_iters=args.tune_iters,
                                   max_plans=(None if args.max_plans == 0
                                              else args.max_plans)),
-            registry=registry)
+            registry=registry, tracer=tracer)
         serve_fn = sync.serve_batch
     # warm the pow-2 batch-size buckets so measured batches replay cached
     # plans/executables instead of paying plan build + XLA compile
@@ -102,7 +119,7 @@ def _serve_async(args, g, feat, cfg, registry):
     summary = engine.summary()
     engine.close()
 
-    doc = registry_to_json(registry, context=run_context())
+    doc = registry_to_json(registry, tracer=tracer, context=run_context())
     print(f"[serve_gnn] requests={res['requests']} "
           f"completed={res['completed']} "
           f"throughput={res['throughput_rps']:.1f} req/s")
@@ -121,6 +138,7 @@ def _serve_async(args, g, feat, cfg, registry):
             write_metrics(registry, args.metrics_out, "prom")
         print(f"[serve_gnn] wrote metrics ({args.metrics_format}) -> "
               f"{args.metrics_out}")
+    _write_trace(args, tracer)
 
     ok = res["drained"] and acc["outstanding"] == 0
     ok = ok and acc["submitted"] == acc["completed"] + acc["rejected"]
@@ -198,6 +216,10 @@ def main(argv=None) -> int:
     p.add_argument("--metrics-format", default="json",
                    choices=["json", "prom"],
                    help="exporter for --metrics-out")
+    p.add_argument("--trace-out", default=None,
+                   help="write the run's span records as a Chrome/Perfetto "
+                        "trace JSON (open in ui.perfetto.dev; "
+                        "docs/observability.md)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
     use_async = (args.policy in ("deadline", "clock") or args.tenants > 1
@@ -227,12 +249,13 @@ def main(argv=None) -> int:
 
     from repro.graphs.csr import random_power_law
     from repro.models.gnn import GNNConfig
-    from repro.obs import (MetricsRegistry, registry_to_json, run_context,
-                           write_metrics)
+    from repro.obs import (MetricsRegistry, SpanTracer, registry_to_json,
+                           run_context, write_metrics)
     from repro.serving import ServingConfig, ServingEngine
 
     t0 = time.time()
     registry = MetricsRegistry()
+    tracer = SpanTracer(registry)
     g = random_power_law(args.num_nodes, args.avg_degree, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     feat = rng.standard_normal((g.num_nodes, args.in_dim)).astype(np.float32)
@@ -241,7 +264,7 @@ def main(argv=None) -> int:
                     num_layers=args.layers, backend=args.backend,
                     feat_dtype=args.dtype)
     if use_async:
-        return 0 if _serve_async(args, g, feat, cfg, registry) else 1
+        return 0 if _serve_async(args, g, feat, cfg, registry, tracer) else 1
 
     engine = ServingEngine(
         g, feat, cfg,
@@ -251,7 +274,7 @@ def main(argv=None) -> int:
                               tune_iters=args.tune_iters,
                               max_plans=(None if args.max_plans == 0
                                          else args.max_plans)),
-        registry=registry)
+        registry=registry, tracer=tracer)
     print(f"[serve_gnn] graph n={g.num_nodes} e={g.num_edges} arch={args.arch} "
           f"backend={args.backend} hops={engine.hops} "
           f"(setup {time.time() - t0:.1f}s)")
@@ -264,7 +287,7 @@ def main(argv=None) -> int:
     # one registry, one exporter: the stdout stats ARE the JSON metrics
     # document, and --metrics-out writes the same document (span durations
     # live in the registry as span_seconds{span=...} histograms)
-    doc = registry_to_json(registry, context=run_context())
+    doc = registry_to_json(registry, tracer=tracer, context=run_context())
     print(f"[serve_gnn] requests={s['requests']} "
           f"throughput={s['req_per_s']:.1f} req/s "
           f"hit-rate={c['hit_rate']:.2f}")
@@ -278,6 +301,7 @@ def main(argv=None) -> int:
             write_metrics(registry, args.metrics_out, "prom")
         print(f"[serve_gnn] wrote metrics ({args.metrics_format}) -> "
               f"{args.metrics_out}")
+    _write_trace(args, tracer)
 
     ok = True
     if args.verify > 0:

@@ -46,14 +46,25 @@ import time
 GNN_ARCHS = ("gcn", "gin", "gat")
 
 
-def _write_metrics(args, registry) -> None:
+def _write_metrics(args, registry, tracer=None) -> None:
     if not args.metrics_out:
         return
     from repro.obs import run_context, write_metrics
     write_metrics(registry, args.metrics_out, args.metrics_format,
-                  context=run_context())
+                  tracer=tracer, context=run_context())
     print(f"[train] wrote metrics ({args.metrics_format}) -> "
           f"{args.metrics_out}")
+
+
+def _write_trace(args, tracer) -> None:
+    """--trace-out: the Trainer's span records as a Chrome/Perfetto trace
+    (open in ui.perfetto.dev or chrome://tracing —
+    docs/observability.md)."""
+    if not getattr(args, "trace_out", None):
+        return
+    from repro.obs import run_context, write_chrome_trace
+    write_chrome_trace(args.trace_out, tracer, context=run_context())
+    print(f"[train] wrote Chrome trace -> {args.trace_out}")
 
 
 class _ShardedBatches:
@@ -81,13 +92,14 @@ def _main_gnn_sampled(args) -> int:
     from repro.models.gnn import (GNNConfig, init_gnn_params,
                                   structural_labels)
     from repro.optim.adamw import AdamWConfig, adamw_init, cosine_schedule
-    from repro.obs import MetricsRegistry
+    from repro.obs import MetricsRegistry, SpanTracer
     from repro.runtime.trainer import (FailureInjector, Trainer,
                                        TrainerConfig)
     from repro.sampling import (LoaderConfig, SampledLoader,
                                 SampledTrainStep, ShardedSampledTrainStep)
 
     registry = MetricsRegistry()
+    tracer = SpanTracer(registry)
     t0 = time.time()
     g, spec, feat = make_dataset(args.dataset, scale=args.scale,
                                  max_nodes=args.max_nodes, seed=args.seed,
@@ -129,7 +141,8 @@ def _main_gnn_sampled(args) -> int:
         TrainerConfig(ckpt_dir=ckpt_dir, ckpt_every=args.ckpt_every,
                       log_every=10),
         step_fn, batch_fn, (params, adamw_init(params)),
-        injector=FailureInjector(args.fail_at or ()), registry=registry)
+        injector=FailureInjector(args.fail_at or ()), registry=registry,
+        tracer=tracer)
     t1 = time.time()
     try:
         trainer.run(args.steps)
@@ -147,7 +160,8 @@ def _main_gnn_sampled(args) -> int:
           f"jit_buckets={step_fn.num_buckets} traces={step_fn.traces} "
           f"cache_hit_rate={cache['hit_rate']:.2f} "
           f"wall={time.time()-t1:.1f}s")
-    _write_metrics(args, registry)
+    _write_metrics(args, registry, tracer)
+    _write_trace(args, tracer)
     return 0
 
 
@@ -160,12 +174,13 @@ def _main_gnn(args) -> int:
     from repro.graphs.datasets import make_dataset
     from repro.models.gnn import (GNNConfig, build_gnn, make_gnn_train_step,
                                   planted_labels)
-    from repro.obs import MetricsRegistry
+    from repro.obs import MetricsRegistry, SpanTracer
     from repro.optim.adamw import AdamWConfig, adamw_init, cosine_schedule
     from repro.runtime.trainer import (FailureInjector, Trainer,
                                        TrainerConfig)
 
     registry = MetricsRegistry()
+    tracer = SpanTracer(registry)
     max_nodes = args.max_nodes if args.max_nodes is not None else 2000
     g, spec, feat = make_dataset(args.dataset, scale=args.scale,
                                  max_nodes=max_nodes, seed=args.seed)
@@ -211,7 +226,8 @@ def _main_gnn(args) -> int:
                       log_every=10),
         step_fn, lambda step: batch,
         (model.params, adamw_init(model.params)),
-        injector=FailureInjector(args.fail_at or ()), registry=registry)
+        injector=FailureInjector(args.fail_at or ()), registry=registry,
+        tracer=tracer)
     t0 = time.time()
     trainer.run(args.steps)
     hist = trainer.metrics_history
@@ -222,7 +238,8 @@ def _main_gnn(args) -> int:
           f"dataset={args.dataset} shards={args.shards} steps={len(hist)} "
           f"{losses}avg_step={trainer.avg_step_time()*1e3:.1f}ms "
           f"wall={time.time()-t0:.1f}s")
-    _write_metrics(args, registry)
+    _write_metrics(args, registry, tracer)
+    _write_trace(args, tracer)
     return 0
 
 
@@ -275,6 +292,10 @@ def main(argv=None) -> int:
     p.add_argument("--metrics-format", default="json",
                    choices=["json", "prom"],
                    help="exporter for --metrics-out")
+    p.add_argument("--trace-out", default=None,
+                   help="write the run's span records as a Chrome/Perfetto "
+                        "trace JSON (open in ui.perfetto.dev; "
+                        "docs/observability.md)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -295,11 +316,12 @@ def main(argv=None) -> int:
     from repro.data import PipelineConfig, TokenPipeline, make_lm_batch
     from repro.models.lm import make_train_step
     from repro.nn.transformer import lm_init
-    from repro.obs import MetricsRegistry
+    from repro.obs import MetricsRegistry, SpanTracer
     from repro.optim.adamw import AdamWConfig, adamw_init, cosine_schedule
     from repro.runtime.trainer import (FailureInjector, Trainer, TrainerConfig)
 
     registry = MetricsRegistry()
+    tracer = SpanTracer(registry)
     arch = get_arch(args.arch)
     cfg = arch.reduced() if args.reduced else arch.full()
     params, specs = lm_init(cfg, jax.random.PRNGKey(args.seed))
@@ -329,7 +351,8 @@ def main(argv=None) -> int:
         TrainerConfig(ckpt_dir=ckpt_dir, ckpt_every=args.ckpt_every,
                       log_every=10),
         step_fn, batch_fn, (params, opt_state),
-        injector=FailureInjector(args.fail_at or ()), registry=registry)
+        injector=FailureInjector(args.fail_at or ()), registry=registry,
+        tracer=tracer)
     t0 = time.time()
     trainer.run(args.steps)
     dt = time.time() - t0
@@ -337,7 +360,8 @@ def main(argv=None) -> int:
     print(f"[train] arch={cfg.name} steps={len(hist)} "
           f"first_loss={hist[0]['loss']:.4f} last_loss={hist[-1]['loss']:.4f} "
           f"wall={dt:.1f}s")
-    _write_metrics(args, registry)
+    _write_metrics(args, registry, tracer)
+    _write_trace(args, tracer)
     return 0
 
 

@@ -3,27 +3,56 @@
 One `MetricsRegistry` threaded through the serving engine, plan cache,
 sampled loader, trainer, sharded executors and benchmarks; a `SpanTracer`
 for nested wall-clock spans with honest-under-async-dispatch close
-semantics; JSON / Prometheus exporters that render the same registry.
+semantics; JSON / Prometheus exporters that render the same registry; a
+Chrome/Perfetto trace exporter over the tracer's records; the on-device
+measurement harness (`measure` / `profile_plan`) that turns the analytical
+`KernelModel` into a measured one; and the persisted perf-baseline layer
+(`repro.obs.baseline`) behind `tools/bench_compare.py`'s CI regression
+gate.
 """
+from repro.obs.baseline import (BASELINE_SCHEMA, append_history,
+                                compare_rows, load_baseline, make_baseline,
+                                row_tolerance, save_baseline,
+                                validate_baseline)
+from repro.obs.chrome_trace import chrome_trace_doc, write_chrome_trace
 from repro.obs.context import run_context
 from repro.obs.export import (lint_prometheus, registry_to_json,
-                              to_prometheus_text, write_metrics)
+                              to_prometheus_text, unescape_label_value,
+                              write_metrics)
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                exponential_bounds, pow2_bounds)
+from repro.obs.profile import (Measurement, ProfileReport, ScheduleProfile,
+                               measure, profile_plan)
 from repro.obs.trace import Span, SpanTracer
 
 __all__ = [
+    "BASELINE_SCHEMA",
     "Counter",
     "Gauge",
     "Histogram",
+    "Measurement",
     "MetricsRegistry",
+    "ProfileReport",
+    "ScheduleProfile",
     "Span",
     "SpanTracer",
+    "append_history",
+    "chrome_trace_doc",
+    "compare_rows",
     "exponential_bounds",
     "lint_prometheus",
+    "load_baseline",
+    "make_baseline",
+    "measure",
     "pow2_bounds",
+    "profile_plan",
     "registry_to_json",
+    "row_tolerance",
     "run_context",
+    "save_baseline",
     "to_prometheus_text",
+    "unescape_label_value",
+    "validate_baseline",
+    "write_chrome_trace",
     "write_metrics",
 ]

@@ -30,7 +30,7 @@ from typing import Optional
 from repro.obs.metrics import MetricsRegistry
 
 __all__ = ["lint_prometheus", "registry_to_json", "to_prometheus_text",
-           "write_metrics"]
+           "unescape_label_value", "write_metrics"]
 
 _NAME_OK = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
 _SAMPLE = re.compile(
@@ -52,13 +52,35 @@ def _fmt(v: float) -> str:
     return repr(float(v))
 
 
+def _escape_label_value(v) -> str:
+    """Exposition-format label-value escaping: backslash, double-quote and
+    newline — the three characters scrapers require escaped.  Anything
+    less corrupts line-based parsers (a raw newline splits the sample in
+    two); `lint_prometheus` rejects unescaped output."""
+    return (str(v).replace("\\", r"\\").replace('"', r'\"')
+            .replace("\n", r"\n"))
+
+
 def _label_str(labels: dict, extra: Optional[dict] = None) -> str:
     items = {**labels, **(extra or {})}
     if not items:
         return ""
-    esc = lambda v: str(v).replace("\\", r"\\").replace('"', r'\"')
-    return ("{" + ",".join(f'{_sanitize(k)}="{esc(v)}"'
+    return ("{" + ",".join(f'{_sanitize(k)}="{_escape_label_value(v)}"'
                            for k, v in sorted(items.items())) + "}")
+
+
+def unescape_label_value(v: str) -> str:
+    """Inverse of the exposition-format escaping (round-trip tests)."""
+    out, i = [], 0
+    while i < len(v):
+        if v[i] == "\\" and i + 1 < len(v):
+            nxt = v[i + 1]
+            out.append("\n" if nxt == "n" else nxt)
+            i += 2
+        else:
+            out.append(v[i])
+            i += 1
+    return "".join(out)
 
 
 def registry_to_json(registry: MetricsRegistry, *, tracer=None,
@@ -121,6 +143,29 @@ def write_metrics(registry: MetricsRegistry, path: str, fmt: str = "json",
                          f"(expected 'json' or 'prom')")
 
 
+_LABEL_PAIR = re.compile(r'([a-zA-Z_][a-zA-Z0-9_:]*)="((?:[^"\\\n]|\\["\\n])*)"')
+
+
+def _lint_labels(blob: str):
+    """Problem string when a ``{...}`` label blob is not a comma-joined
+    sequence of ``name="value"`` pairs with fully escaped values (raw
+    ``\\``, ``"`` or newline inside a value breaks scrapers)."""
+    s = blob[1:-1]
+    i, first = 0, True
+    while i < len(s):
+        if not first:
+            if s[i] != ",":
+                return f"expected ',' in labels at offset {i}: {s[i:i+20]!r}"
+            i += 1
+        m = _LABEL_PAIR.match(s, i)
+        if m is None:
+            return (f"unparseable or unescaped label pair at offset {i}: "
+                    f"{s[i:i+20]!r}")
+        i = m.end()
+        first = False
+    return None
+
+
 def _strip_le(labels: str) -> str:
     """Label string minus the ``le`` pair, normalized so bucket and
     _sum/_count series of the same histogram compare equal."""
@@ -133,6 +178,8 @@ def lint_prometheus(text: str) -> list:
     clean).  Checks the invariants scrapers actually depend on:
 
       * every sample line parses as ``name[{labels}] value``;
+      * label blobs are comma-joined ``name="value"`` pairs whose values
+        carry no unescaped ``\\``, ``"`` or newline;
       * every sample's base name has a preceding ``# TYPE``;
       * histogram series carry a ``+Inf`` bucket whose value equals
         ``_count``, and bucket counts are cumulative (non-decreasing).
@@ -154,6 +201,10 @@ def lint_prometheus(text: str) -> list:
             problems.append(f"line {i}: unparseable sample: {line!r}")
             continue
         name, labels = m.group(1), m.group(2) or ""
+        if labels:
+            lp = _lint_labels(labels)
+            if lp is not None:
+                problems.append(f"line {i}: {lp}")
         base = name
         for suf in ("_bucket", "_sum", "_count"):
             if name.endswith(suf) and name[: -len(suf)] in types:

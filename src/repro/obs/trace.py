@@ -79,6 +79,18 @@ class SpanTracer:
         self._records: deque = deque(maxlen=max_spans)
         self._local = threading.local()
         self._t0 = time.perf_counter()
+        # compact per-tracer thread ids: the Chrome-trace exporter wants
+        # small stable track numbers, not 64-bit thread idents
+        self._tids: dict = {}
+        self._tid_lock = threading.Lock()
+
+    def _tid(self) -> int:
+        ident = threading.get_ident()
+        with self._tid_lock:
+            tid = self._tids.get(ident)
+            if tid is None:
+                tid = self._tids[ident] = len(self._tids)
+            return tid
 
     def _stack(self) -> list:
         st = getattr(self._local, "stack", None)
@@ -108,10 +120,15 @@ class SpanTracer:
                 "span_seconds", labels={"span": path},
                 desc="wall-clock span durations (repro.obs.trace)",
             ).observe(sp.duration_s)
+            # tid + thread name ride in every record: the Chrome-trace
+            # exporter needs a per-thread track, the JSON exporter's
+            # ``spans`` section gets attributable multi-thread traces
             self._records.append({
                 "span": path,
                 "t_rel_s": round(sp.t_start - self._t0, 6),
                 "duration_s": round(sp.duration_s, 6),
+                "tid": self._tid(),
+                "thread": threading.current_thread().name,
                 **({"attrs": dict(sp.attrs)} if sp.attrs else {}),
             })
 

@@ -16,7 +16,7 @@ from typing import Any, Callable, Iterable, Optional
 import jax
 import numpy as np
 
-from repro.obs import MetricsRegistry
+from repro.obs import MetricsRegistry, SpanTracer
 from repro.runtime.checkpoint import (AsyncCheckpointer, latest_step,
                                       restore_checkpoint)
 
@@ -72,7 +72,8 @@ class Trainer:
                  *, state_shardings: Optional[Pytree] = None,
                  injector: Optional[FailureInjector] = None,
                  log_fn: Callable[[str], None] = print,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[SpanTracer] = None):
         self.cfg = cfg
         self.step_fn = step_fn
         self.batch_fn = batch_fn
@@ -84,6 +85,10 @@ class Trainer:
         # launch driver's registry when one is threaded in, so train CLI
         # metrics land in the same --metrics-out document as the loader's
         self.registry = registry if registry is not None else MetricsRegistry()
+        # span structure train -> train/step -> train/step/{batch,checkpoint}
+        # lands in span_seconds AND the ring buffer the Chrome-trace
+        # exporter reads (launch/train.py --trace-out)
+        self.trace = tracer if tracer is not None else SpanTracer(self.registry)
         self._h_step = self.registry.histogram(
             "train_step_seconds", desc="batch_fn + step_fn wall time")
         self._c_steps = self.registry.counter(
@@ -111,21 +116,25 @@ class Trainer:
         while self.step < until_step:
             if self.injector is not None:
                 self.injector.maybe_fail(self.step)
-            batch = self.batch_fn(self.step)
-            t0 = time.time()
-            self.state, metrics = self.step_fn(self.state, batch)
-            # the float() casts below block on the step's metric scalars,
-            # so this wall time covers device compute, not just dispatch
-            metrics = {k: float(v) for k, v in metrics.items()}
-            metrics["step_time_s"] = time.time() - t0
+            with self.trace.span("step", step=self.step):
+                with self.trace.span("batch"):
+                    batch = self.batch_fn(self.step)
+                t0 = time.time()
+                self.state, metrics = self.step_fn(self.state, batch)
+                # the float() casts below block on the step's metric
+                # scalars, so this wall time (and the enclosing span)
+                # covers device compute, not just dispatch
+                metrics = {k: float(v) for k, v in metrics.items()}
+                metrics["step_time_s"] = time.time() - t0
             metrics["step"] = self.step
             self._h_step.observe(metrics["step_time_s"])
             self._c_steps.inc()
             self.metrics_history.append(metrics)
             self.step += 1
             if self.step % self.cfg.ckpt_every == 0:
-                self.ckpt.save(self.step, self.state,
-                               metadata={"step": self.step})
+                with self.trace.span("checkpoint", step=self.step):
+                    self.ckpt.save(self.step, self.state,
+                                   metadata={"step": self.step})
                 self._c_ckpts.inc()
             if self.step % self.cfg.log_every == 0:
                 keys = [k for k in ("loss", "xent", "accuracy", "grad_norm")
@@ -144,17 +153,19 @@ class Trainer:
         """Run to `self.step + num_steps`, surviving injected failures."""
         target = self.step + num_steps
         restarts = 0
-        while self.step < target:
-            try:
-                self._run_until(target)
-            except SimulatedFailure as e:
-                restarts += 1
-                if restarts > self.cfg.max_restarts:
-                    raise RuntimeError("too many restarts") from e
-                self.log(f"[trainer] {e}; restarting from latest checkpoint")
-                self.ckpt.wait()
-                self._maybe_restore()
-        self.ckpt.wait()
+        with self.trace.span("train", steps=num_steps):
+            while self.step < target:
+                try:
+                    self._run_until(target)
+                except SimulatedFailure as e:
+                    restarts += 1
+                    if restarts > self.cfg.max_restarts:
+                        raise RuntimeError("too many restarts") from e
+                    self.log(f"[trainer] {e}; restarting from latest "
+                             f"checkpoint")
+                    self.ckpt.wait()
+                    self._maybe_restore()
+            self.ckpt.wait()
         return self.state
 
     def close(self):

@@ -135,7 +135,8 @@ class ServingEngine:
                  params=None, key: Optional[jax.Array] = None,
                  serving: Optional[ServingConfig] = None,
                  registry: Optional[MetricsRegistry] = None,
-                 cache: Optional[PlanCache] = None):
+                 cache: Optional[PlanCache] = None,
+                 tracer: Optional[SpanTracer] = None):
         assert feat.shape == (graph.num_nodes, cfg.in_dim), \
             (feat.shape, graph.num_nodes, cfg.in_dim)
         self.graph = graph
@@ -155,7 +156,9 @@ class ServingEngine:
         # (the launch drivers do — engine + cache + tracer then export as
         # one document; see docs/observability.md)
         self.registry = registry if registry is not None else MetricsRegistry()
-        self.trace = SpanTracer(self.registry)
+        # a shared tracer (launch drivers pass one) pools this engine's
+        # spans with the caller's for a single Chrome-trace export
+        self.trace = tracer if tracer is not None else SpanTracer(self.registry)
         # ``cache``: optional SHARED PlanCache — multi-tenant serving runs
         # several engines (one per tenant model) over one fingerprint-keyed
         # cache, so plans amortize across tenants (plans depend on graph

@@ -153,6 +153,26 @@ def test_tracer_ring_buffer_bounded():
     assert len(recs) == 4 and recs[-1]["span"] == "s9"
 
 
+def test_tracer_records_carry_thread_identity():
+    tr = SpanTracer(MetricsRegistry())
+    with tr.span("main_side"):
+        pass
+
+    def worker():
+        with tr.span("thread_side"):
+            pass
+
+    t = threading.Thread(target=worker, name="worker-0")
+    t.start()
+    t.join()
+    recs = {r["span"]: r for r in tr.records()}
+    # compact per-tracer tids (Chrome-trace tracks), plus the thread name
+    assert recs["main_side"]["tid"] == 0
+    assert recs["thread_side"]["tid"] == 1
+    assert recs["thread_side"]["thread"] == "worker-0"
+    assert recs["main_side"]["thread"] == threading.current_thread().name
+
+
 # -------------------------------------------------------------- exporters
 
 def _toy_registry():
@@ -200,6 +220,34 @@ def test_prometheus_lint_catches_malformed():
         'x_seconds_count 9\n')
     assert lint_prometheus(bad) != []
     assert lint_prometheus("no_type_metric 1\n") != []
+
+
+def test_label_value_escaping_round_trip():
+    from repro.obs import unescape_label_value
+
+    reg = MetricsRegistry()
+    nasty = 'quote " back \\ newline \n done'
+    reg.gauge("weird", labels={"k": nasty}).set(1)
+    text = to_prometheus_text(reg)
+    # raw specials never appear inside a label value on the wire ...
+    assert lint_prometheus(text) == []
+    assert "\n done" not in text.split("# TYPE", 1)[1].splitlines()[1]
+    # ... and the escaped value round-trips exactly
+    line = [l for l in text.splitlines() if l.startswith("weird{")][0]
+    escaped = line[line.index('k="') + 3:line.rindex('"')]
+    assert unescape_label_value(escaped) == nasty
+
+
+def test_lint_rejects_unescaped_label_values():
+    # raw backslash-quote corruption inside a label value
+    bad = '# TYPE g gauge\ng{k="a"b"} 1\n'
+    assert lint_prometheus(bad) != []
+    # an unescaped lone backslash at value end
+    bad2 = '# TYPE g gauge\ng{k="a\\"} 1\n'
+    assert lint_prometheus(bad2) != []
+    # properly escaped versions pass
+    good = '# TYPE g gauge\ng{k="a\\"b"} 1\ng{k="a\\\\"} 2\n'
+    assert lint_prometheus(good) == []
 
 
 def test_run_context_fields():

@@ -1,0 +1,194 @@
+"""Perf-regression gate: compare fresh BENCH_*.json against baselines.
+
+    PYTHONPATH=src python tools/bench_compare.py --bench-dir bench-json \
+        [--baseline-dir benchmarks/baselines] [--update-baselines] \
+        [--rel-floor 0.10] [--noise-factor 3.0] [--warn-only] [FILE ...]
+
+For every ``BENCH_<section>.json`` (from `benchmarks/run.py --json-dir`,
+or passed explicitly) the matching baseline
+``benchmarks/baselines/<section>.json`` (schema ``repro.bench_baseline/v1``,
+`repro.obs.baseline`) is loaded and compared row by row with a noise-aware
+tolerance derived from each row's recorded p50/p90 spread.  Per-row
+verdicts (improve / flat / regress / missing / new) are printed; the exit
+code is the gate:
+
+  0  clean (or ``--warn-only`` and only perf problems)
+  1  regressions or missing rows (suppressed by ``--warn-only``)
+  2  schema problems — malformed bench or baseline documents, or a bench
+     section that itself failed (``ok: false``).  NEVER suppressed:
+     a gate that silently compares nothing is worse than no gate.
+
+``--update-baselines`` replaces each baseline's rows with the fresh
+measurement, appends a compact history entry (git SHA, timestamp,
+name -> us), and creates baselines for new sections — run it locally when
+a perf change is intentional and commit the result
+(docs/observability.md, Profiling section).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.baseline import (append_history, compare_rows, load_baseline,
+                                make_baseline, save_baseline,
+                                validate_baseline)
+
+_VERDICT_ORDER = {"regress": 0, "missing": 1, "new": 2, "improve": 3,
+                  "flat": 4}
+
+
+def _section(path: str) -> str:
+    """BENCH_<section>.json -> <section> (baseline filename stem)."""
+    base = os.path.basename(path)
+    stem = base[:-len(".json")] if base.endswith(".json") else base
+    return stem[len("BENCH_"):] if stem.startswith("BENCH_") else stem
+
+
+def _load_bench(path: str):
+    """(doc, problems): bench document schema issues are hard failures."""
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return None, [f"{path}: unreadable/unparsable JSON: {e}"]
+    problems = []
+    if doc.get("ok") is False:
+        problems.append(f"{path}: bench section failed (ok: false) — "
+                        f"no perf comparison is meaningful")
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        problems.append(f"{path}: empty or missing 'rows' list")
+    else:
+        for i, r in enumerate(rows):
+            if not isinstance(r, dict) or "name" not in r \
+                    or not isinstance(r.get("us_per_call"), (int, float)):
+                problems.append(f"{path}: rows[{i}] missing name/us_per_call")
+                break
+    return doc, problems
+
+
+def _fmt_row(section: str, v: dict) -> str:
+    name = f"{section}/{v['name']}"
+    if v["verdict"] == "missing":
+        return (f"MISSING  {name}: baseline={v['base_us']:.1f}us, row "
+                f"absent from current run (stale baseline? run "
+                f"--update-baselines deliberately)")
+    if v["verdict"] == "new":
+        return f"new      {name}: {v['cur_us']:.1f}us (no baseline yet)"
+    pct = (v["ratio"] - 1.0) * 100.0 if v["ratio"] is not None else 0.0
+    return (f"{v['verdict']:<8} {name}: base={v['base_us']:.1f}us "
+            f"cur={v['cur_us']:.1f}us ({pct:+.1f}% vs tol "
+            f"±{v['tol_rel'] * 100.0:.0f}%)")
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        description="noise-aware perf-regression gate over BENCH_*.json")
+    p.add_argument("files", nargs="*",
+                   help="explicit BENCH_<section>.json files (else scan "
+                        "--bench-dir)")
+    p.add_argument("--bench-dir", default=None,
+                   help="directory holding BENCH_*.json (benchmarks.run "
+                        "--json-dir output)")
+    p.add_argument("--baseline-dir",
+                   default=os.path.join(os.path.dirname(__file__), "..",
+                                        "benchmarks", "baselines"),
+                   help="committed baseline documents (default: "
+                        "benchmarks/baselines)")
+    p.add_argument("--update-baselines", action="store_true",
+                   help="install the fresh rows as the new baselines and "
+                        "append a history entry (then commit the result)")
+    p.add_argument("--rel-floor", type=float, default=0.10,
+                   help="minimum relative tolerance per row")
+    p.add_argument("--noise-factor", type=float, default=3.0,
+                   help="tolerance = noise_factor * max recorded "
+                        "(p90-p50)/p50 spread")
+    p.add_argument("--warn-only", action="store_true",
+                   help="report regressions/missing rows but exit 0 "
+                        "(shared CI runners); schema problems still fail")
+    args = p.parse_args(argv)
+
+    paths = list(args.files)
+    if args.bench_dir:
+        paths += sorted(glob.glob(os.path.join(args.bench_dir,
+                                               "BENCH_*.json")))
+    if not paths:
+        print("usage: bench_compare.py --bench-dir DIR | FILE ...",
+              file=sys.stderr)
+        return 2
+
+    schema_problems: list = []
+    perf_problems: list = []
+    for path in paths:
+        section = _section(path)
+        doc, problems = _load_bench(path)
+        if problems:
+            schema_problems += problems
+            continue
+        rows = doc["rows"]
+        base_path = os.path.join(args.baseline_dir, f"{section}.json")
+        if not os.path.exists(base_path):
+            if args.update_baselines:
+                os.makedirs(args.baseline_dir, exist_ok=True)
+                fresh = make_baseline(section, rows,
+                                      context=doc.get("context"))
+                append_history(fresh, rows, doc.get("context"))
+                save_baseline(fresh, base_path)
+                print(f"[bench_compare] created baseline {base_path} "
+                      f"({len(rows)} rows)")
+            else:
+                print(f"[bench_compare] note: no baseline for {section} "
+                      f"({base_path}); run --update-baselines to seed one")
+            continue
+        try:
+            base = load_baseline(base_path)
+        except (OSError, json.JSONDecodeError) as e:
+            schema_problems.append(f"{base_path}: unreadable/unparsable: {e}")
+            continue
+        bp = validate_baseline(base, base_path)
+        if bp:
+            schema_problems += bp
+            continue
+        verdicts = compare_rows(base["rows"], rows,
+                                rel_floor=args.rel_floor,
+                                noise_factor=args.noise_factor)
+        verdicts.sort(key=lambda v: (_VERDICT_ORDER.get(v["verdict"], 9),
+                                     str(v["name"])))
+        for v in verdicts:
+            print(f"[bench_compare] {_fmt_row(section, v)}")
+            if v["verdict"] in ("regress", "missing"):
+                perf_problems.append(f"{section}/{v['name']}: {v['verdict']}")
+        counts: dict = {}
+        for v in verdicts:
+            counts[v["verdict"]] = counts.get(v["verdict"], 0) + 1
+        print(f"[bench_compare] {section}: "
+              + " ".join(f"{k}={counts[k]}" for k in sorted(counts)))
+        if args.update_baselines:
+            append_history(base, rows, doc.get("context"))
+            save_baseline(base, base_path)
+            print(f"[bench_compare] updated baseline {base_path} "
+                  f"(history={len(base['history'])})")
+
+    for s in schema_problems:
+        print(f"[bench_compare] SCHEMA PROBLEM: {s}")
+    if schema_problems:
+        return 2
+    if perf_problems and not args.update_baselines:
+        print(f"[bench_compare] {len(perf_problems)} perf problem(s): "
+              + "; ".join(perf_problems))
+        if not args.warn_only:
+            return 1
+        print("[bench_compare] --warn-only: not failing the gate")
+    else:
+        print(f"[bench_compare] OK: {len(paths)} section(s) compared, "
+              f"no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
