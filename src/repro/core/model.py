@@ -137,14 +137,22 @@ def predict_tiles(props: GraphProps, cfg: AggConfig) -> float:
 def vmem_working_set(cfg: AggConfig, bytes_feat: int | None = None) -> int:
     """VMEM bytes per grid step (double-buffered window) — Eq. 4 analogue.
 
+    For the one-hot variants the 2x window factor models the pipelined
+    BlockSpec load; for ``direct`` it is the literal two-slot DMA scratch
+    the kernel allocates.  ``direct`` has no gather matrix at all — its
+    transient is the (gpt*gs, dt) gathered-rows block.
+
     ``bytes_feat`` defaults to the config's own dtype policy
     (``cfg.feat_dtype``); pass it explicitly only to price a hypothetical."""
     if bytes_feat is None:
         bytes_feat = cfg.bytes_feat
     window = 2 * cfg.src_win * cfg.dt * bytes_feat          # double-buffered
-    gather_mat = cfg.gpt * cfg.src_win * 4
-    if cfg.variant == "slot_onehot":
-        gather_mat *= cfg.gs
+    if cfg.variant == "direct":
+        gather_mat = cfg.gpt * cfg.gs * cfg.dt * 4          # gathered rows, f32
+    else:
+        gather_mat = cfg.gpt * cfg.src_win * 4
+        if cfg.variant == "slot_onehot":
+            gather_mat *= cfg.gs
     meta = cfg.gpt * cfg.gs * (4 + 4) + cfg.gpt * 4
     out_block = cfg.ont * cfg.dt * 4
     return window + gather_mat + meta + out_block
@@ -183,9 +191,22 @@ def config_is_feasible(cfg: AggConfig, *, hw: TPUSpec = TPU_V5E,
     return config_infeasibility(cfg, hw=hw, bytes_feat=bytes_feat) is None
 
 
+# fixed per-row cost of issuing one dynamic-slice gather (address compute +
+# copy setup) in the ``direct`` variant, in VPU-op units — small next to the
+# 2*dt multiply-accumulate for realistic dt, but it keeps tiny-dt configs
+# from looking free
+_DIRECT_ROW_ISSUE_OPS = 32
+
+
 @dataclasses.dataclass
 class KernelModel:
-    """Three-term latency model of the group_aggregate schedule."""
+    """Three-term latency model of the group_aggregate schedule.
+
+    The gather term is per-variant (see `terms`): the one-hot paths pay an
+    MXU matmul against the full src_win window, ``direct`` pays a VPU
+    row-gather that never touches src_win — which is why direct wins on
+    wide-window memory-bound schedules and the measured selector
+    (`core.tuner.select_variant_measured`) exists to confirm it."""
 
     hw: TPUSpec = TPU_V5E
 
@@ -197,11 +218,21 @@ class KernelModel:
         T = float(tiles if tiles is not None else predict_tiles(props, cfg))
         J = max(math.ceil(dim / cfg.dt), 1)
         steps = T * J
-        # compute: gather matmul + scatter matmul (MXU) + W build (VPU)
-        gather_rows = cfg.gpt * (cfg.gs if cfg.variant == "slot_onehot" else 1)
-        mxu_flops = steps * 2 * (gather_rows * cfg.src_win * cfg.dt
-                                 + cfg.ont * cfg.gpt * cfg.dt)
-        vpu_ops = steps * cfg.gs * cfg.gpt * cfg.src_win  # W build compares/fma
+        # per-variant gather cost:
+        #   slot_onehot/folded — gather matmul on the MXU plus the W-build
+        #     iota-compares on the VPU (the term that scales with src_win);
+        #   direct — no gather matmul and no W build: gpt*gs dynamic-slice
+        #     row copies plus weight/reduce, all VPU, scaling with dt only.
+        if cfg.variant == "direct":
+            mxu_flops = steps * 2 * cfg.ont * cfg.gpt * cfg.dt  # scatter only
+            vpu_ops = steps * cfg.gs * cfg.gpt * (
+                2 * cfg.dt + _DIRECT_ROW_ISSUE_OPS)
+        else:
+            gather_rows = cfg.gpt * (cfg.gs if cfg.variant == "slot_onehot"
+                                     else 1)
+            mxu_flops = steps * 2 * (gather_rows * cfg.src_win * cfg.dt
+                                     + cfg.ont * cfg.gpt * cfg.dt)
+            vpu_ops = steps * cfg.gs * cfg.gpt * cfg.src_win  # W build
         peak = self.hw.peak_flops_bf16 if bytes_feat == 2 else self.hw.peak_flops_f32
         t_compute = mxu_flops / peak + vpu_ops / (self.hw.peak_flops_f32 / 2)
         # memory: feature-window DMAs (dominant), metadata, output flushes

@@ -16,21 +16,30 @@ One `pl.pallas_call` realizes the paper's §5 workload-management stack:
                             paper's coalesced thread→dim mapping (Fig. 6b) is
                             lane order on TPU.
 
-The gather itself is a **one-hot matmul against a scalar-prefetch-selected
-feature window** (`src_win` rows) — the MXU-native realization of a sparse
-gather.  Two variants:
+Three gather variants:
 
   * ``slot_onehot`` — paper-faithful mapping: one one-hot row per neighbor
     slot ((gpt*gs, src_win) @ (src_win, dt)), i.e. one lane-row per "thread".
+    MXU-native realization of a sparse gather.
   * ``folded`` — beyond-paper optimization: edge weights and the intra-group
     sum are folded INTO the gather matrix (W[g, r] = Σ_s ev[g,s]·1[nbr=r]),
     shrinking the matmul contracting work by gs× ((gpt, src_win) @
     (src_win, dt)).  Recorded as a §Perf hillclimb step.
+  * ``direct`` — the CUDA-faithful mapping (GNNAdvisor's
+    `partSize`/`dimWorker` indexing): gather each group's `gs` neighbor rows
+    with per-slot dynamic slices (`jnp.take`) out of the VMEM-resident
+    feature window — no one-hot `W` materialization, no gs×src_win
+    iota-compare — then weight and reduce on the VPU.  For this variant the
+    feature operand stays off-chip (`pltpu.ANY`) and the window load is a
+    **double-buffered DMA** (`pltpu.make_async_copy` into a two-slot VMEM
+    scratch): the next grid step's window fetch overlaps the current step's
+    gather/reduce, replacing the BlockSpec-driven window load.
 
 Grid = (D/dt, T) with tiles innermost so output/feature block revisits are
 consecutive.  Scalar-prefetched per-tile metadata (`tile_node_block`,
-`tile_window`) drives the BlockSpec index maps — the kernel body never does
-a dynamic HBM load.
+`tile_window`) drives the BlockSpec index maps (and, for ``direct``, the
+DMA source slices) — the kernel body never does a dynamic HBM load outside
+the explicit async copies.
 """
 from __future__ import annotations
 
@@ -42,9 +51,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["group_aggregate_pallas", "group_edge_grad_pallas"]
+__all__ = ["group_aggregate_pallas", "group_edge_grad_pallas", "VARIANTS"]
 
-Variant = Literal["folded", "slot_onehot"]
+Variant = Literal["folded", "slot_onehot", "direct"]
+# canonical order: default first (tuner/selector candidate lists index this)
+VARIANTS: tuple = ("folded", "slot_onehot", "direct")
+
+
+def _check_variant(variant: str) -> None:
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown gather variant {variant!r}; "
+                         f"expected one of {VARIANTS}")
 
 
 def _kernel(nb_ref, tw_ref,                       # scalar prefetch (SMEM)
@@ -80,11 +97,12 @@ def _kernel(nb_ref, tw_ref,                       # scalar prefetch (SMEM)
         # Folded: W[g, r] = sum_s evals[g, s] * 1[local[g, s] == r];
         # the intra-group reduction happens inside the gather matrix,
         # cutting matmul FLOPs by gs (beyond-paper §Perf optimization).
-        cols = jax.lax.broadcasted_iota(jnp.int32, (gpt, src_win), 1)
-        w = jnp.zeros((gpt, src_win), jnp.float32)
-        for s in range(gs):
-            hit = (local[:, s:s + 1] == cols).astype(jnp.float32)
-            w = w + hit * evals[:, s:s + 1]
+        # One 3-D compare-and-reduce — NOT a Python loop over gs, which
+        # unrolled gs compare+add pairs into the trace and made high-gs
+        # configs compile-time-bound.
+        cols = jax.lax.broadcasted_iota(jnp.int32, (gpt, gs, src_win), 2)
+        hit = (local[:, :, None] == cols).astype(jnp.float32)
+        w = (hit * evals[:, :, None].astype(jnp.float32)).sum(axis=1)
         per_group = jnp.dot(w.astype(fdtype), feat,
                             preferred_element_type=jnp.float32)      # (gpt, dt)
 
@@ -93,6 +111,72 @@ def _kernel(nb_ref, tw_ref,                       # scalar prefetch (SMEM)
     ln = lnode_ref[0].reshape(1, gpt)
     scatter = (rows == ln).astype(jnp.float32)
     # padded groups carry all-zero evals => per_group row is 0: safe to land on row 0
+    out_ref[...] += jnp.dot(scatter, per_group, preferred_element_type=jnp.float32)
+
+
+def _direct_kernel(nb_ref, tw_ref,                    # scalar prefetch (SMEM)
+                   feat_ref,                          # ANY (stays off-chip)
+                   nbrs_ref, eval_ref, lnode_ref,     # VMEM inputs
+                   out_ref,                           # VMEM output block
+                   win_ref, sem_ref,                  # 2-slot scratch + DMA sems
+                   *, gs: int, gpt: int, ont: int, src_win: int, dt: int):
+    """``direct`` gather: dynamic-slice rows out of a double-buffered window.
+
+    The feature window is NOT a BlockSpec operand here — each grid step DMAs
+    its (src_win, dt) window slice into one slot of a two-slot VMEM scratch
+    and prefetches the NEXT tile's window into the other slot before doing
+    any compute, so the fetch for step t+1 overlaps the gather/reduce of
+    step t.  Every DMA started is waited within the same j-row (the t+1
+    prefetch is suppressed on the last tile), so nothing leaks across the
+    dim-tile boundary; the t==0 warm-up re-issues the first fetch for each j.
+    """
+    j = pl.program_id(0)
+    t = pl.program_id(1)
+    num_t = pl.num_programs(1)
+
+    def window_copy(slot, tile):
+        # descriptor is reconstructed identically at start() and wait()
+        return pltpu.make_async_copy(
+            feat_ref.at[pl.ds(tw_ref[tile] * src_win, src_win),
+                        pl.ds(j * dt, dt)],
+            win_ref.at[slot], sem_ref.at[slot])
+
+    slot = jax.lax.rem(t, 2)
+
+    @pl.when(t == 0)
+    def _warmup():
+        window_copy(0, 0).start()
+
+    @pl.when(t + 1 < num_t)
+    def _prefetch_next():
+        window_copy(1 - slot, t + 1).start()
+
+    # --- leader-node flush boundary: zero the accumulator on first visit ---
+    prev = nb_ref[jnp.maximum(t - 1, 0)]
+    first_visit = jnp.logical_or(t == 0, nb_ref[t] != prev)
+
+    @pl.when(first_visit)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    window_copy(slot, t).wait()
+
+    nbrs = nbrs_ref[0]                              # (gpt, gs) int32
+    evals = eval_ref[0]                             # (gpt, gs), 0 => padding
+    local = nbrs - tw_ref[t] * src_win              # in [0, src_win) by constr.
+    feat = win_ref[slot]                            # (src_win, dt)
+
+    # per-slot dynamic-slice gather — padded slots point at the window base
+    # (local == 0) and carry evals == 0, so no masking is needed
+    gathered = jnp.take(feat, local.reshape(gpt * gs), axis=0)
+    weighted = (gathered.astype(jnp.float32)
+                * evals.reshape(gpt * gs, 1).astype(jnp.float32))
+    per_group = weighted.reshape(gpt, gs, dt).sum(axis=1)            # (gpt, dt)
+
+    # --- inter-group scatter within the node block: one-hot matmul on MXU ---
+    rows = jax.lax.broadcasted_iota(jnp.int32, (ont, gpt), 0)
+    ln = lnode_ref[0].reshape(1, gpt)
+    scatter = (rows == ln).astype(jnp.float32)
     out_ref[...] += jnp.dot(scatter, per_group, preferred_element_type=jnp.float32)
 
 
@@ -137,15 +221,77 @@ def _edge_grad_kernel(nb_ref, tw_ref,                 # scalar prefetch (SMEM)
     out_ref[...] += (fsel * gsel).sum(axis=1).reshape(1, gpt, gs)
 
 
+def _direct_edge_grad_kernel(nb_ref, tw_ref,          # scalar prefetch (SMEM)
+                             grad_ref,                # VMEM (ont, dt) block
+                             feat_ref,                # ANY (stays off-chip)
+                             nbrs_ref, lnode_ref,     # VMEM inputs
+                             out_ref,                 # (1, gpt, gs) per tile
+                             win_ref, sem_ref,        # 2-slot scratch + sems
+                             *, gs: int, gpt: int, ont: int, src_win: int,
+                             dt: int):
+    """``direct`` edge-value cotangent: same dynamic-slice gather as the
+    forward direct kernel, mirrored so `jax.custom_vjp` stays
+    variant-consistent.  Grid is (T, J) with dim tiles innermost; the
+    double buffer cycles on the LINEAR step index so the prefetch crosses
+    tile boundaries (the window for (t+1, j=0) loads while (t, J-1)
+    computes)."""
+    t = pl.program_id(0)
+    j = pl.program_id(1)
+    num_t = pl.num_programs(0)
+    num_j = pl.num_programs(1)
+    step = t * num_j + j
+
+    def window_copy(slot, tile, dim):
+        return pltpu.make_async_copy(
+            feat_ref.at[pl.ds(tw_ref[tile] * src_win, src_win),
+                        pl.ds(dim * dt, dt)],
+            win_ref.at[slot], sem_ref.at[slot])
+
+    slot = jax.lax.rem(step, 2)
+
+    @pl.when(step == 0)
+    def _warmup():
+        window_copy(0, 0, 0).start()
+
+    @pl.when(step + 1 < num_t * num_j)
+    def _prefetch_next():
+        wrap = j + 1 >= num_j
+        nt = jnp.where(wrap, t + 1, t)
+        nj = jnp.where(wrap, 0, j + 1)
+        window_copy(1 - slot, nt, nj).start()
+
+    @pl.when(j == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    window_copy(slot, t, j).wait()
+
+    nbrs = nbrs_ref[0]                                  # (gpt, gs) global ids
+    local = nbrs - tw_ref[t] * src_win
+    feat = win_ref[slot]                                # (src_win, dt)
+    grad = grad_ref[...]                                # (ont, dt)
+
+    # dynamic-slice gathers replace both one-hot matmuls: neighbor features
+    # out of the DMA'd window, output-row cotangents out of the grad block
+    fsel = jnp.take(feat, local.reshape(gpt * gs),
+                    axis=0).astype(jnp.float32)          # (gpt*gs, dt)
+    gsel = jnp.take(grad, lnode_ref[0],
+                    axis=0).astype(jnp.float32)          # (gpt, dt)
+    contrib = (fsel.reshape(gpt, gs, dt) * gsel[:, None, :]).sum(axis=2)
+    out_ref[...] += contrib.reshape(1, gpt, gs)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("gs", "gpt", "ont", "src_win", "dt", "interpret"),
+    static_argnames=("gs", "gpt", "ont", "src_win", "dt", "variant",
+                     "interpret"),
 )
 def group_edge_grad_pallas(grad_padded: jax.Array, feat_padded: jax.Array,
                            nbrs: jax.Array, local_node: jax.Array,
                            tile_node_block: jax.Array, tile_window: jax.Array,
                            *, gs: int, gpt: int, ont: int, src_win: int,
-                           dt: int, interpret: bool = False) -> jax.Array:
+                           dt: int, variant: Variant = "slot_onehot",
+                           interpret: bool = False) -> jax.Array:
     """Per-slot edge-value cotangent: the backward of aggregation w.r.t. the
     (T, gpt, gs) edge-value tensor.
 
@@ -156,9 +302,14 @@ def group_edge_grad_pallas(grad_padded: jax.Array, feat_padded: jax.Array,
 
     grad_padded: (out_rows, D_pad) output cotangent, out_rows % ont == 0.
     feat_padded: (N_src_pad, D_pad), N_src_pad % src_win == 0, D_pad % dt == 0.
+    variant: "direct" runs the dynamic-slice gather with double-buffered
+    window DMA (mirroring the forward direct kernel); any other variant
+    runs the one-hot-matmul gather (forward ``folded``/``slot_onehot``
+    share it — the per-slot cotangent has no folded form).
     Returns (T, gpt, gs) float32.  Padded slots hold garbage; callers gather
     only real (edge_slot, edge_pos) entries.
     """
+    _check_variant(variant)
     out_rows, d_pad = grad_padded.shape
     n_src, d_pad2 = feat_padded.shape
     assert d_pad == d_pad2 and d_pad % dt == 0, (d_pad, d_pad2, dt)
@@ -167,19 +318,36 @@ def group_edge_grad_pallas(grad_padded: jax.Array, feat_padded: jax.Array,
     assert nbrs.shape == (T, gpt, gs) and local_node.shape == (T, gpt)
     J = d_pad // dt
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(T, J),
-        in_specs=[
-            pl.BlockSpec((ont, dt), lambda t, j, nb, tw: (nb[t], j)),
-            pl.BlockSpec((src_win, dt), lambda t, j, nb, tw: (tw[t], j)),
-            pl.BlockSpec((1, gpt, gs), lambda t, j, nb, tw: (t, 0, 0)),
-            pl.BlockSpec((1, gpt), lambda t, j, nb, tw: (t, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, gpt, gs), lambda t, j, nb, tw: (t, 0, 0)),
-    )
-    kernel = functools.partial(_edge_grad_kernel, gs=gs, gpt=gpt, ont=ont,
-                               src_win=src_win)
+    if variant == "direct":
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(T, J),
+            in_specs=[
+                pl.BlockSpec((ont, dt), lambda t, j, nb, tw: (nb[t], j)),
+                pl.BlockSpec(memory_space=pltpu.ANY),   # feat: manual DMA
+                pl.BlockSpec((1, gpt, gs), lambda t, j, nb, tw: (t, 0, 0)),
+                pl.BlockSpec((1, gpt), lambda t, j, nb, tw: (t, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, gpt, gs), lambda t, j, nb, tw: (t, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((2, src_win, dt), feat_padded.dtype),
+                            pltpu.SemaphoreType.DMA((2,))],
+        )
+        kernel = functools.partial(_direct_edge_grad_kernel, gs=gs, gpt=gpt,
+                                   ont=ont, src_win=src_win, dt=dt)
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(T, J),
+            in_specs=[
+                pl.BlockSpec((ont, dt), lambda t, j, nb, tw: (nb[t], j)),
+                pl.BlockSpec((src_win, dt), lambda t, j, nb, tw: (tw[t], j)),
+                pl.BlockSpec((1, gpt, gs), lambda t, j, nb, tw: (t, 0, 0)),
+                pl.BlockSpec((1, gpt), lambda t, j, nb, tw: (t, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, gpt, gs), lambda t, j, nb, tw: (t, 0, 0)),
+        )
+        kernel = functools.partial(_edge_grad_kernel, gs=gs, gpt=gpt, ont=ont,
+                                   src_win=src_win)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -217,7 +385,9 @@ def group_aggregate_pallas(feat_padded: jax.Array,
         output-block / feature-window indices driving the BlockSpec index
         maps.
     gs, gpt, ont, src_win, dt, out_rows : static ints; out_rows % ont == 0.
-    variant : "folded" | "slot_onehot" — see module docstring.
+    variant : "folded" | "slot_onehot" | "direct" — see module docstring.
+        ``direct`` keeps the feature operand off-chip and double-buffers the
+        window fetch (`pltpu.make_async_copy` into a 2-slot VMEM scratch).
     interpret : run under the Pallas interpreter (CPU).
 
     Returns (out_rows, D_pad) float32: out[v] = Σ_slots ev · feat[nbr].
@@ -234,6 +404,7 @@ def group_aggregate_pallas(feat_padded: jax.Array,
     ...     jnp.asarray(p.tile_window), gs=p.gs, gpt=p.gpt, ont=p.ont,
     ...     src_win=p.src_win, dt=128, out_rows=p.padded_out_rows)
     """
+    _check_variant(variant)
     n_src, d_pad = feat_padded.shape
     assert n_src % src_win == 0 and d_pad % dt == 0, (n_src, d_pad, src_win, dt)
     assert out_rows % ont == 0
@@ -242,19 +413,36 @@ def group_aggregate_pallas(feat_padded: jax.Array,
     assert local_node.shape == (T, gpt)
     J = d_pad // dt
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(J, T),
-        in_specs=[
-            pl.BlockSpec((src_win, dt), lambda j, t, nb, tw: (tw[t], j)),
-            pl.BlockSpec((1, gpt, gs), lambda j, t, nb, tw: (t, 0, 0)),
-            pl.BlockSpec((1, gpt, gs), lambda j, t, nb, tw: (t, 0, 0)),
-            pl.BlockSpec((1, gpt), lambda j, t, nb, tw: (t, 0)),
-        ],
-        out_specs=pl.BlockSpec((ont, dt), lambda j, t, nb, tw: (nb[t], j)),
-    )
-    kernel = functools.partial(_kernel, gs=gs, gpt=gpt, ont=ont,
-                               src_win=src_win, variant=variant)
+    if variant == "direct":
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(J, T),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),   # feat: manual DMA
+                pl.BlockSpec((1, gpt, gs), lambda j, t, nb, tw: (t, 0, 0)),
+                pl.BlockSpec((1, gpt, gs), lambda j, t, nb, tw: (t, 0, 0)),
+                pl.BlockSpec((1, gpt), lambda j, t, nb, tw: (t, 0)),
+            ],
+            out_specs=pl.BlockSpec((ont, dt), lambda j, t, nb, tw: (nb[t], j)),
+            scratch_shapes=[pltpu.VMEM((2, src_win, dt), feat_padded.dtype),
+                            pltpu.SemaphoreType.DMA((2,))],
+        )
+        kernel = functools.partial(_direct_kernel, gs=gs, gpt=gpt, ont=ont,
+                                   src_win=src_win, dt=dt)
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(J, T),
+            in_specs=[
+                pl.BlockSpec((src_win, dt), lambda j, t, nb, tw: (tw[t], j)),
+                pl.BlockSpec((1, gpt, gs), lambda j, t, nb, tw: (t, 0, 0)),
+                pl.BlockSpec((1, gpt, gs), lambda j, t, nb, tw: (t, 0, 0)),
+                pl.BlockSpec((1, gpt), lambda j, t, nb, tw: (t, 0)),
+            ],
+            out_specs=pl.BlockSpec((ont, dt), lambda j, t, nb, tw: (nb[t], j)),
+        )
+        kernel = functools.partial(_kernel, gs=gs, gpt=gpt, ont=ont,
+                                   src_win=src_win, variant=variant)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

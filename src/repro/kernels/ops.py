@@ -308,9 +308,12 @@ def _aggregate_impl(feat: jax.Array, sched: DeviceSchedule, *,
 
 def _edge_cotangent(g_out: jax.Array, feat: jax.Array,
                     sched: DeviceSchedule, *, dt: int,
-                    backend: Backend) -> jax.Array:
+                    backend: Backend,
+                    variant: str = "slot_onehot") -> jax.Array:
     """Cotangent w.r.t. per-edge values (original CSR order): the per-edge
-    gather-dot <g_out[dst], feat[src]>, via the forward schedule."""
+    gather-dot <g_out[dst], feat[src]>, via the forward schedule.  The
+    gather variant mirrors the forward kernel's (``direct`` runs the
+    dynamic-slice + double-buffered-DMA edge-grad kernel)."""
     n, d = feat.shape
     T, gpt, gs = sched.edge_val.shape
     if backend == "xla":
@@ -327,7 +330,7 @@ def _edge_cotangent(g_out: jax.Array, feat: jax.Array,
             sched.nbrs, sched.local_node,
             sched.tile_node_block, sched.tile_window,
             gs=sched.gs, gpt=sched.gpt, ont=sched.ont,
-            src_win=sched.src_win, dt=dt_eff,
+            src_win=sched.src_win, dt=dt_eff, variant=variant,
             interpret=(backend == "pallas_interpret"))
     return per_slot.reshape(T * gpt, gs)[sched.edge_slot, sched.edge_pos]
 
@@ -371,7 +374,7 @@ def _aggregate_diff_bwd(statics, statics_bwd, opts, res, g_out):
     else:
         ev_bwd = edge_values[sched_bwd.edge_perm]
         ev_bar = _edge_cotangent(g_out, feat, sched,
-                                 dt=dt, backend=backend
+                                 dt=dt, backend=backend, variant=variant
                                  ).astype(edge_values.dtype)
     feat_bar = _aggregate_impl(g_out, sched_bwd, dt=dt, backend=backend,
                                variant=variant, edge_values=ev_bwd)
@@ -395,6 +398,11 @@ def aggregate(feat: jax.Array, sched: DeviceSchedule, *,
     ``out_dtype`` (None = float32 — see the module docstring's dtype
     rules; the bf16 policy passes the feature dtype to keep activations
     16-bit between layers).
+
+    variant: gather path on the Pallas backends — "folded" | "slot_onehot"
+    | "direct" (see `repro.kernels.group_aggregate`); applies to forward,
+    feature backward, and the edge-value cotangent alike so the custom VJP
+    stays variant-consistent.  The XLA reference ignores it (one lowering).
 
     edge_values: optional (E,) per-edge weights in ORIGINAL CSR edge order,
     overriding the schedule's static values — the dynamic-edge-value path

@@ -345,8 +345,13 @@ def profile_plan(plan, feat=None, *, backend: str = "xla",
     report = ProfileReport(schedules=tuple(schedules), total=m_total,
                            dim=d, backend=backend)
     if registry is not None:
+        # the variant label makes residuals / achieved bytes attributable
+        # per GATHER PATH, not just per schedule — without it a measured
+        # selector flipping a plan from folded to direct would silently
+        # re-base every profile gauge it touches
+        variant = str(plan.config.variant)
         for s in schedules:
-            lbl = {"schedule": s.schedule}
+            lbl = {"schedule": s.schedule, "variant": variant}
             registry.gauge(
                 "kernel_model_residual", labels=lbl,
                 desc="measured p50 / KernelModel-predicted latency",

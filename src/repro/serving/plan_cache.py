@@ -121,6 +121,9 @@ class PlanCache:
                  bucket_shapes: bool = True, seed: int = 0,
                  with_backward: bool = False, config_fn=None,
                  feat_dtype: str = "float32",
+                 measure_variants: bool = False,
+                 variant_candidates: Optional[tuple] = None,
+                 variant_measure_iters: int = 3,
                  registry: Optional[MetricsRegistry] = None):
         self.backend = backend
         self.tune_mode = tune_mode
@@ -142,6 +145,21 @@ class PlanCache:
         # kernel model prices wrong) supply a heuristic; the memo and the
         # two-level hit accounting behave exactly as with the tuner.
         self.config_fn = config_fn
+        # measure_variants: race the kernel gather variants on each newly
+        # planned schedule (`core.tuner.select_variant_measured`) and stamp
+        # the measured winner into the plan's config.  The decision is
+        # memoized per (graph_fingerprint, pow2 kernel-facing-dim bucket) —
+        # the same shape-class key the config memo uses — so one
+        # measurement transfers across every graph in the workload class.
+        # Off by default: measurement costs a few kernel launches per new
+        # shape class, and on backend="xla" (single lowering) all variants
+        # tie, so the default folded wins and nothing changes.
+        self.measure_variants = measure_variants
+        self.variant_candidates = variant_candidates
+        self.variant_measure_iters = variant_measure_iters
+        self._variants: "OrderedDict[tuple, str]" = OrderedDict()
+        self.variant_selections = 0
+        self.variant_memo_hits = 0
         # with_backward: every built plan also carries the transposed-graph
         # schedule (`plan_for(with_backward=True)`) so cached entries are
         # train-ready — the sampled mini-batch loader's mode.  Backward tile
@@ -251,6 +269,8 @@ class PlanCache:
                     part_bwd, bucket_pow2(part_bwd.num_tiles))
             plan = dataclasses.replace(plan, partition=part,
                                        partition_bwd=part_bwd)
+        if self.measure_variants:
+            plan = self._apply_measured_variant(plan, fp)
         ent = CacheEntry(plan=plan, executor=plan.executor(self.backend))
         self._h_build.observe(time.perf_counter() - t_build)
         self.registry.counter(
@@ -262,6 +282,41 @@ class PlanCache:
             self.evictions += 1
             self._c_evict.inc()
         return ent
+
+    def _apply_measured_variant(self, plan: Plan, fp: tuple) -> Plan:
+        """Stamp the measured-winner gather variant into a freshly built
+        plan (runs inside the cache lock — measurement serializes with
+        builds, which is what a shared cache wants: one thread measures,
+        everyone reuses).
+
+        The memo key is (graph fingerprint, pow2 bucket of the
+        kernel-facing dim): the variant tradeoff depends on the schedule
+        shape class and the feature width the kernel runs at, not on the
+        exact subgraph."""
+        from repro.core.tuner import plan_facing_dim, select_variant_measured
+
+        vkey = fp + (bucket_pow2(plan_facing_dim(plan)),)
+        variant = self._variants.get(vkey)
+        if variant is not None:
+            self._variants.move_to_end(vkey)
+            self.variant_memo_hits += 1
+        else:
+            kwargs = {} if self.variant_candidates is None else {
+                "variants": self.variant_candidates}
+            variant, _ = select_variant_measured(
+                plan, backend=self.backend, seed=self.seed,
+                iters=self.variant_measure_iters, registry=self.registry,
+                **kwargs)
+            self._variants[vkey] = variant
+            self.variant_selections += 1
+            # bound alongside the config memo (same workload-class growth)
+            while (self.max_configs is not None
+                   and len(self._variants) > self.max_configs):
+                self._variants.popitem(last=False)
+        if variant != plan.config.variant:
+            plan = dataclasses.replace(
+                plan, config=dataclasses.replace(plan.config, variant=variant))
+        return plan
 
     def _set_config(self, fp: tuple, config: AggConfig) -> None:
         with self._lock:
@@ -300,4 +355,6 @@ class PlanCache:
             "configs": self.num_configs,
             "evictions": self.evictions,
             "config_evictions": self.config_evictions,
+            "variant_selections": self.variant_selections,
+            "variant_memo_hits": self.variant_memo_hits,
         }

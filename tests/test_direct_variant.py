@@ -1,0 +1,344 @@
+"""The ``direct`` gather variant (dynamic-slice + double-buffered window
+DMA) and the measured per-schedule variant selection built on it.
+
+Parity targets come from the issue contract: forward/backward vs
+``slot_onehot`` at 1e-5 (f32) and 1e-2 (bf16), across static and dynamic
+edge values, bipartite (unwritten-node-block) blocks, odd dims, and
+interpret-mode inside shard_map.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.model import AggConfig
+from repro.core.partition import partition_graph, transpose_graph
+from repro.graphs.csr import random_power_law
+from repro.kernels.ops import DeviceSchedule, aggregate
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _scheds(g, *, gs=8, gpt=8, ont=8, src_win=64, edge_vals=None, seed=0):
+    p = partition_graph(g, gs=gs, gpt=gpt, ont=ont, src_win=src_win,
+                        edge_vals=edge_vals)
+    gT, vals_t, perm = transpose_graph(g, edge_vals)
+    pT = partition_graph(gT, gs=gs, gpt=gpt, ont=ont, src_win=src_win,
+                         edge_vals=vals_t)
+    return DeviceSchedule(p), DeviceSchedule(pT, edge_perm=perm)
+
+
+# ---------------------------------------------------- forward parity
+
+
+@pytest.mark.parametrize("dim", [32, 100])   # 100: odd (non-lane-aligned)
+def test_direct_fwd_parity_f32_static_edges(dim, rng):
+    g = random_power_law(250, 6.0, seed=11)
+    ev = rng.uniform(0.5, 1.5, g.num_edges).astype(np.float32)
+    sched, _ = _scheds(g, edge_vals=ev)
+    feat = jnp.asarray(rng.standard_normal((g.num_nodes, dim)), jnp.float32)
+    ref = aggregate(feat, sched, dt=32, backend="pallas_interpret",
+                    variant="slot_onehot")
+    got = aggregate(feat, sched, dt=32, backend="pallas_interpret",
+                    variant="direct")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dim", [64, 130])
+def test_direct_fwd_parity_bf16(dim, rng):
+    g = random_power_law(250, 6.0, seed=12)
+    sched, _ = _scheds(g)
+    feat = jnp.asarray(rng.standard_normal((g.num_nodes, dim)), jnp.bfloat16)
+    ref = aggregate(feat, sched, dt=32, backend="pallas_interpret",
+                    variant="slot_onehot", out_dtype=jnp.bfloat16)
+    got = aggregate(feat, sched, dt=32, backend="pallas_interpret",
+                    variant="direct", out_dtype=jnp.bfloat16)
+    r = np.asarray(ref, np.float32)
+    d = np.abs(np.asarray(got, np.float32) - r)
+    assert d.max() <= 1e-2 * (1.0 + np.abs(r).max())
+
+
+# ---------------------------------------------------- backward parity
+
+
+def _grads(sched, sched_bwd, feat, ev, variant, dt=32):
+    def loss(f, e):
+        out = aggregate(f, sched, dt=dt, backend="pallas_interpret",
+                        variant=variant, edge_values=e, sched_bwd=sched_bwd)
+        return (out.astype(jnp.float32) ** 2).sum()
+    return jax.grad(loss, argnums=(0, 1))(feat, ev)
+
+
+def test_direct_bwd_parity_f32_dynamic_edges(rng):
+    g = random_power_law(220, 5.0, seed=13)
+    sched, sched_bwd = _scheds(g)
+    feat = jnp.asarray(rng.standard_normal((g.num_nodes, 48)), jnp.float32)
+    ev = jnp.asarray(rng.uniform(-1, 1, g.num_edges), jnp.float32)
+    gf_ref, ge_ref = _grads(sched, sched_bwd, feat, ev, "slot_onehot")
+    gf, ge = _grads(sched, sched_bwd, feat, ev, "direct")
+    scale_f = 1.0 + float(jnp.abs(gf_ref).max())
+    scale_e = 1.0 + float(jnp.abs(ge_ref).max())
+    assert float(jnp.abs(gf - gf_ref).max()) <= 1e-5 * scale_f
+    assert float(jnp.abs(ge - ge_ref).max()) <= 1e-5 * scale_e
+
+
+def test_direct_bwd_parity_f32_static_edges(rng):
+    g = random_power_law(220, 5.0, seed=14)
+    ev = rng.uniform(0.5, 1.5, g.num_edges).astype(np.float32)
+    sched, sched_bwd = _scheds(g, edge_vals=ev)
+    feat = jnp.asarray(rng.standard_normal((g.num_nodes, 48)), jnp.float32)
+
+    def loss(variant):
+        def f(x):
+            out = aggregate(x, sched, dt=32, backend="pallas_interpret",
+                            variant=variant, sched_bwd=sched_bwd)
+            return (out ** 2).sum()
+        return jax.grad(f)(feat)
+
+    ref = loss("slot_onehot")
+    got = loss("direct")
+    scale = 1.0 + float(jnp.abs(ref).max())
+    assert float(jnp.abs(got - ref).max()) <= 1e-5 * scale
+
+
+def test_direct_bwd_parity_bf16_dynamic_edges(rng):
+    g = random_power_law(220, 5.0, seed=15)
+    sched, sched_bwd = _scheds(g)
+    feat = jnp.asarray(rng.standard_normal((g.num_nodes, 64)), jnp.bfloat16)
+    ev = jnp.asarray(rng.uniform(-1, 1, g.num_edges), jnp.float32)
+    gf_ref, ge_ref = _grads(sched, sched_bwd, feat, ev, "slot_onehot")
+    gf, ge = _grads(sched, sched_bwd, feat, ev, "direct")
+    for got, ref in ((gf, gf_ref), (ge, ge_ref)):
+        r = np.asarray(ref, np.float32)
+        d = np.abs(np.asarray(got, np.float32) - r)
+        assert d.max() <= 1e-2 * (1.0 + np.abs(r).max())
+
+
+# ------------------------------------------ bipartite / unwritten blocks
+
+
+def test_direct_bipartite_unvisited_blocks_read_zero(rng):
+    from repro.graphs.subgraph import pad_to_nodes
+    g = random_power_law(60, 4.0, seed=16)
+    gp = pad_to_nodes(g, 256)            # rows 60..255 have no edges
+    ev = np.ones(gp.num_edges, np.float32)
+    p = partition_graph(gp, gs=8, gpt=8, ont=8, src_win=64, edge_vals=ev)
+    sched = DeviceSchedule(p)
+    feat = jnp.asarray(rng.standard_normal((gp.num_nodes, 16)), jnp.float32)
+    out = np.asarray(aggregate(feat, sched, dt=16,
+                               backend="pallas_interpret", variant="direct"))
+    ref = np.asarray(aggregate(feat, sched, dt=16,
+                               backend="pallas_interpret",
+                               variant="slot_onehot"))
+    assert np.all(out[g.num_nodes:] == 0.0)
+    assert np.all(np.isfinite(out))
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_unknown_variant_raises(rng):
+    g = random_power_law(50, 3.0, seed=17)
+    sched, _ = _scheds(g, gs=4, gpt=4, src_win=32)
+    feat = jnp.asarray(rng.standard_normal((g.num_nodes, 8)), jnp.float32)
+    with pytest.raises(ValueError, match="unknown gather variant"):
+        aggregate(feat, sched, dt=8, backend="pallas_interpret",
+                  variant="banana")
+
+
+# ---------------------------------------------- interpret-mode shard_map
+
+
+def test_direct_in_shard_map_interpret():
+    """The direct kernel (manual DMA + scratch semaphores) runs inside the
+    halo-exchange shard_map body under interpret mode, forward + grad."""
+    code = """
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.advisor import plan_for
+        from repro.core.aggregate import PlanExecutor
+        from repro.core.model import AggConfig
+        from repro.distributed.graph_shard import ShardedExecutor
+        from repro.graphs.csr import random_power_law
+        from repro.models.gnn import gcn_edge_values
+
+        g, vals = gcn_edge_values(random_power_law(300, 5.0, seed=7))
+        cfg = AggConfig(gs=8, gpt=8, ont=8, src_win=64, dt=16,
+                        variant="direct")
+        plan = plan_for(g, arch="gcn", in_dim=16, edge_vals=vals,
+                        config=cfg, with_backward=True)
+        assert plan.config.variant == "direct"
+        feat = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (g.num_nodes, 16)).astype(np.float32))
+        ref_ex = PlanExecutor(plan, backend="xla")
+        ref = np.asarray(ref_ex(feat))
+        gref = np.asarray(jax.grad(lambda f: (ref_ex(f) ** 2).sum())(feat))
+        ex = ShardedExecutor(plan.shards(2), backend="pallas_interpret")
+        assert np.abs(np.asarray(ex(feat)) - ref).max() < 1e-4
+        gsh = np.asarray(jax.grad(lambda f: (ex(f) ** 2).sum())(feat))
+        assert np.abs(gsh - gref).max() < 1e-4 * (1 + np.abs(gref).max())
+        print("OK")
+    """
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "OK" in r.stdout
+
+
+# ------------------------------------------------- variant plumbing keys
+
+
+def test_variant_in_jit_statics_and_npz_roundtrip(tmp_path):
+    from repro.core.advisor import plan_for
+    from repro.core.plan import Plan
+    g = random_power_law(150, 5.0, seed=18)
+    cfg = AggConfig(gs=8, gpt=8, ont=8, src_win=64, dt=16, variant="direct")
+    plan = plan_for(g, arch="gcn", in_dim=16, config=cfg)
+    folded = plan_for(g, arch="gcn", in_dim=16,
+                      config=AggConfig(gs=8, gpt=8, ont=8, src_win=64, dt=16,
+                                       variant="folded"))
+    # cached executables key on jit_statics: the variant MUST split them
+    assert plan.jit_statics() != folded.jit_statics()
+    assert "direct" in plan.jit_statics()
+    path = str(tmp_path / "plan.npz")
+    plan.save(path)
+    assert Plan.load(path).config.variant == "direct"
+
+
+# -------------------------------------------------- measured selection
+
+
+def test_select_variant_measured_never_picks_slower():
+    """On the XLA reference backend every variant runs the same lowering,
+    so measurement is a noise wash — the selector sticks with the first
+    candidate (the default) unless a later one wins beyond the margin.
+    Either way it must NEVER return a variant measured slower than the
+    default."""
+    from repro.core.advisor import plan_for
+    from repro.core.tuner import select_variant_measured
+    g = random_power_law(120, 4.0, seed=19)
+    plan = plan_for(g, arch="gcn", in_dim=16, tune_iters=2)
+    best, p50s = select_variant_measured(plan, backend="xla", iters=3,
+                                         warmup=1)
+    assert set(p50s) == {"folded", "direct"}
+    if best != "folded":       # only on a strict beyond-margin win
+        assert p50s[best] < p50s["folded"] * 0.95
+    # a giant margin always resolves to the default
+    best2, _ = select_variant_measured(plan, backend="xla", iters=2,
+                                       warmup=1, margin=1.0)
+    assert best2 == "folded"
+
+
+def test_select_variant_measured_registry_labels():
+    from repro.core.advisor import plan_for
+    from repro.core.tuner import select_variant_measured
+    from repro.obs import MetricsRegistry
+    from repro.obs.export import lint_prometheus, to_prometheus_text
+    g = random_power_law(120, 4.0, seed=20)
+    plan = plan_for(g, arch="gcn", in_dim=16, tune_iters=2)
+    reg = MetricsRegistry()
+    best, _ = select_variant_measured(plan, backend="xla", iters=2,
+                                      warmup=1, registry=reg)
+    gauges = [m for m in reg.snapshot()
+              if m["name"] == "variant_measured_p50_seconds"]
+    assert {m["labels"]["variant"] for m in gauges} == {"folded", "direct"}
+    assert lint_prometheus(to_prometheus_text(reg)) == []
+
+
+def test_measured_tune_returns_table():
+    from repro.core.tuner import measured_tune
+    g = random_power_law(200, 5.0, seed=21)
+    tr = measured_tune(g, 32, top_k=2, iters=3, pop=6, measure_iters=2,
+                       backend="pallas_interpret")
+    assert tr.best.variant in ("folded", "direct")
+    assert tr.measured and all(p50 > 0 for p50 in tr.measured.values())
+    # the winner's measured p50 is the minimum of the table
+    assert tr.best_score == min(tr.measured.values())
+    # and it is never slower than the default-variant run of the SAME config
+    base_cfg = next(c for (c, v) in tr.measured if v == "folded"
+                    and c.astuple() == tr.best.astuple())
+    assert tr.best_score <= tr.measured[(base_cfg, "folded")]
+
+
+def test_plan_cache_variant_memo(rng):
+    """measure_variants races once per (fingerprint, dim-bucket) and
+    memoizes: a same-shape-class rebuild reuses the decision."""
+    from repro.serving.plan_cache import PlanCache
+    g = random_power_law(200, 5.0, seed=22)
+    cache = PlanCache(backend="pallas_interpret", measure_variants=True,
+                      variant_measure_iters=2)
+    e1 = cache.get_or_build(g, arch="gcn", in_dim=16, hidden_dim=16,
+                            num_layers=2)
+    assert cache.variant_selections == 1
+    # different edge values -> exact-level miss, fingerprint + variant hit
+    ev = rng.uniform(0.5, 1.5, g.num_edges).astype(np.float32)
+    e2 = cache.get_or_build(g, arch="gcn", in_dim=16, hidden_dim=16,
+                            num_layers=2, edge_vals=ev)
+    assert cache.variant_selections == 1 and cache.variant_memo_hits == 1
+    assert e2.plan.config.variant == e1.plan.config.variant
+    st = cache.stats()
+    assert st["variant_selections"] == 1 and st["variant_memo_hits"] == 1
+
+
+def test_profile_plan_variant_label():
+    """Satellite: profile_plan gauges carry the gather-path label and the
+    new label values survive the Prometheus escape-lint."""
+    from repro.core.advisor import plan_for
+    from repro.obs import MetricsRegistry
+    from repro.obs.export import lint_prometheus, to_prometheus_text
+    from repro.obs.profile import profile_plan
+    g = random_power_law(150, 4.0, seed=23)
+    cfg = AggConfig(gs=8, gpt=8, ont=8, src_win=64, dt=16, variant="direct")
+    plan = plan_for(g, arch="gcn", in_dim=16, config=cfg)
+    reg = MetricsRegistry()
+    profile_plan(plan, backend="xla", dim=16, iters=2, warmup=1,
+                 registry=reg)
+    res = [m for m in reg.snapshot()
+           if m["name"] == "kernel_model_residual"]
+    assert res and all(m["labels"]["variant"] == "direct" for m in res)
+    assert all("schedule" in m["labels"] for m in res)
+    assert lint_prometheus(to_prometheus_text(reg)) == []
+
+
+# ---------------------------------------------- bench_compare: new rows
+
+
+def test_bench_compare_new_rows_exit_zero(tmp_path, capsys):
+    """Rows present in the run but absent from the committed baseline are
+    'new' — informational, NOT gate failures (the variant-rollout path:
+    per-variant rows land before the baseline refresh)."""
+    import importlib.util
+    from repro.obs.baseline import make_baseline, save_baseline
+    path = os.path.join(os.path.dirname(__file__), "..", "tools",
+                        "bench_compare.py")
+    spec = importlib.util.spec_from_file_location("bench_compare", path)
+    bc = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(bc)
+
+    base_rows = [{"name": "agg/x/group", "us_per_call": 100.0,
+                  "p50_us": 100.0, "p90_us": 105.0}]
+    cur_rows = base_rows + [{"name": "agg_variant/x/bf16_w512/direct",
+                             "us_per_call": 40.0}]
+    bench_dir = tmp_path / "bench"
+    base_dir = tmp_path / "baselines"
+    bench_dir.mkdir()
+    base_dir.mkdir()
+    with open(bench_dir / "BENCH_bench_t.json", "w") as f:
+        json.dump({"schema": "repro.bench/v1", "section": "t", "module": "m",
+                   "ok": True, "wall_s": 1.0, "context": {"git_sha": "abc"},
+                   "rows": cur_rows}, f)
+    save_baseline(make_baseline("bench_t", base_rows,
+                                context={"git_sha": "abc"}),
+                  str(base_dir / "bench_t.json"))
+    rc = bc.main(["--bench-dir", str(bench_dir),
+                  "--baseline-dir", str(base_dir)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "new" in out and "agg_variant/x/bf16_w512/direct" in out

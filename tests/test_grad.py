@@ -29,7 +29,7 @@ def _scheds(g, ev, *, gs=8, gpt=8, ont=8, src_win=64):
     return DeviceSchedule(p), DeviceSchedule(pT, edge_perm=perm)
 
 
-@pytest.mark.parametrize("variant", ["folded", "slot_onehot"])
+@pytest.mark.parametrize("variant", ["folded", "slot_onehot", "direct"])
 def test_grad_feat_static_edge_values(variant, rng):
     """Static (GCN-style) edge values: d out / d feat via the transposed
     schedule matches XLA autodiff."""
@@ -48,7 +48,7 @@ def test_grad_feat_static_edge_values(variant, rng):
     np.testing.assert_allclose(gp, gx, atol=1e-4, rtol=1e-4)
 
 
-@pytest.mark.parametrize("variant", ["folded", "slot_onehot"])
+@pytest.mark.parametrize("variant", ["folded", "slot_onehot", "direct"])
 def test_grad_dynamic_edge_value_cotangents(variant, rng):
     """Dynamic (GAT-style) edge values: BOTH cotangents — feat via the
     transposed schedule, edge values via the per-edge gather-dot kernel."""
@@ -172,7 +172,7 @@ def test_model_grad_pallas_matches_xla(arch, rng):
                                    err_msg=k)
 
 
-@pytest.mark.parametrize("variant", ["folded", "slot_onehot"])
+@pytest.mark.parametrize("variant", ["folded", "slot_onehot", "direct"])
 def test_model_grad_both_variants(variant, rng):
     """Both kernel variants differentiate correctly end to end."""
     g = random_power_law(210, 4.0, seed=32)

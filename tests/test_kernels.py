@@ -30,7 +30,7 @@ def _run(g, feat, ev, *, gs, gpt, ont, src_win, dt, variant, backend):
 
 @pytest.mark.parametrize("dtype", [np.float32, np.float16])
 @pytest.mark.parametrize("dim", [8, 48, 130])
-@pytest.mark.parametrize("variant", ["folded", "slot_onehot"])
+@pytest.mark.parametrize("variant", ["folded", "slot_onehot", "direct"])
 def test_kernel_shape_dtype_sweep(dtype, dim, variant, rng):
     g = random_power_law(200, 5.0, seed=3)
     feat = rng.standard_normal((g.num_nodes, dim)).astype(dtype)
