@@ -31,6 +31,7 @@ SECTIONS = [
     ("train step fwd+bwd (smoke)", "benchmarks.bench_train"),
     ("sampled mini-batch training (smoke)", "benchmarks.bench_sampling"),
     ("sharded halo-exchange step (smoke)", "benchmarks.bench_shard"),
+    ("dynamic-graph incremental plan (smoke)", "benchmarks.bench_dynamic"),
     ("roofline (§Roofline)", "benchmarks.roofline"),
 ]
 

@@ -30,6 +30,7 @@ type with one jit-argument convention and one serialization point:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 from typing import Any, Optional
 
@@ -66,6 +67,142 @@ class Plan:
     # transposed CSR's edge order back to the forward graph's.
     partition_bwd: Optional[GroupPartition] = None
     edge_perm_bwd: Optional[np.ndarray] = None
+    # mutable-graph support (docs/dynamic.md): ``epoch`` counts the deltas
+    # applied since the plan was first built (0 = a from-scratch plan) and
+    # travels through the npz schema and every cache key that must
+    # distinguish snapshots of one logical graph.
+    epoch: int = 0
+
+    # ---------------- identity / versioning ----------------
+
+    def fingerprint(self) -> str:
+        """Content hash of what the plan executes: the (plan-order) graph
+        structure, its per-edge values, and the `AggConfig`.  Two plans
+        with equal fingerprints compute the same function; a mutated graph
+        always changes it.  Cached per object (plans are immutable once
+        built — `apply_delta` returns a new one)."""
+        cached = getattr(self, "_fingerprint_cache", None)
+        if cached is None:
+            h = hashlib.blake2b(digest_size=8)
+            h.update(np.int64([self.graph.num_nodes,
+                               self.graph.num_edges]).tobytes())
+            h.update(np.ascontiguousarray(self.graph.indptr).tobytes())
+            h.update(np.ascontiguousarray(self.graph.indices).tobytes())
+            ev = self.partition.edge_values_csr()
+            if ev is not None:
+                h.update(np.ascontiguousarray(ev).tobytes())
+            h.update(repr(self.config).encode())
+            cached = h.hexdigest()
+            self._fingerprint_cache = cached
+        return cached
+
+    # ---------------- incremental maintenance ----------------
+
+    def apply_delta(self, delta, *, edge_vals: Optional[np.ndarray] = None,
+                    threshold: float = 0.25, return_details: bool = False):
+        """Apply a `repro.graphs.delta.GraphDelta` and return a NEW plan
+        (epoch + 1) for the mutated graph, re-partitioning only the node
+        blocks the delta dirties (`repro.core.incremental`) — including
+        the paired backward schedule when the plan carries one.  Above a
+        ``threshold`` dirty-block fraction (either direction) the
+        schedules are rebuilt from scratch at the same config instead
+        (``stats["incremental"]`` records which path ran).
+
+        Delta node ids are in the plan's EXTERNAL (pre-renumber) order;
+        new nodes extend the permutation with identity ids.  ``edge_vals``
+        optionally supplies the mutated graph's full (E2,) per-edge values
+        in the new plan-order CSR edge order (the GCN path, whose degree
+        normalization changes on structurally clean rows); by default
+        surviving edges keep their scheduled values and inserted edges
+        take the delta's ``add_val``.  Because the plan-order edge array
+        only exists once the delta has been applied, ``edge_vals`` may
+        also be a CALLABLE ``(mutated plan-order CSRGraph) -> (E2,)`` —
+        `serving.engine.make_sharded_serve_fn` derives A-hat weights from
+        the mutated graph's own degrees this way.
+
+        ``return_details=True`` additionally returns the underlying
+        `DeltaResult` (plan-order ids) — the shard updater's input."""
+        from repro.core import incremental as inc
+        from repro.core.partition import (partition_graph, transpose_graph)
+        from repro.graphs.delta import carry_edge_values
+
+        n = self.graph.num_nodes
+        n2 = n + delta.num_new_nodes
+        perm2 = self.perm
+        if perm2 is not None:
+            perm2 = np.concatenate([perm2,
+                                    np.arange(n, n2, dtype=perm2.dtype)])
+
+            def remap(x):
+                return (None if x is None
+                        else perm2[np.asarray(x, np.int64).ravel()])
+
+            delta = dataclasses.replace(
+                delta, add_src=remap(delta.add_src),
+                add_dst=remap(delta.add_dst),
+                del_src=remap(delta.del_src), del_dst=remap(delta.del_dst),
+                del_nodes=remap(delta.del_nodes))
+        res = self.graph.apply_delta(delta)
+        g2 = res.graph
+
+        if edge_vals is not None:
+            if callable(edge_vals):
+                edge_vals = edge_vals(g2)
+            ev2 = np.asarray(edge_vals, np.float32)
+            if len(ev2) != g2.num_edges:
+                raise ValueError("edge_vals must align with the mutated "
+                                 "graph's plan-order edge array")
+        else:
+            old_vals = self.partition.edge_values_csr()
+            unit = old_vals is None or bool((old_vals == 1.0).all())
+            if unit and delta.add_val is None:
+                # unit-valued plan stays unit-valued: None lets the patch
+                # reuse kept tiles' value slabs instead of re-scattering E
+                ev2 = None
+            elif old_vals is None:
+                ev2 = res.inserted_val.copy()
+            else:
+                ev2 = carry_edge_values(res, old_vals)
+
+        cfg = self.config
+        frac = inc.dirty_block_fraction(res.dirty_rows, n2, cfg.ont)
+        old_to_new = dirty_src = None
+        if self.partition_bwd is not None:
+            old_to_new, dirty_src = inc.bwd_dirty_sources(
+                self.graph, g2, res.edge_origin)
+            frac = max(frac,
+                       inc.dirty_block_fraction(dirty_src, n2, cfg.ont))
+
+        part_bwd = eperm = None
+        if frac > threshold:
+            mode = "fallback"
+            part = partition_graph(g2, gs=cfg.gs, gpt=cfg.gpt, ont=cfg.ont,
+                                   src_win=cfg.src_win, edge_vals=ev2)
+            if self.partition_bwd is not None:
+                gT, ev_t, eperm = transpose_graph(g2, ev2)
+                part_bwd = partition_graph(
+                    gT, gs=cfg.gs, gpt=cfg.gpt, ont=cfg.ont,
+                    src_win=cfg.src_win, edge_vals=ev_t)
+        else:
+            mode = "patched"
+            part = inc.patch_partition(self.partition, g2, res.dirty_rows,
+                                       res.edge_origin, ev2)
+            if self.partition_bwd is not None:
+                part_bwd, eperm = inc.patch_partition_bwd(
+                    self.partition_bwd, self.edge_perm_bwd, self.graph, g2,
+                    old_to_new, dirty_src, ev2)
+
+        plan = Plan(
+            graph=g2, partition=part, config=cfg, graph_props=None,
+            arch=self.arch, perm=perm2, tuner=None,
+            stats={"incremental": mode,
+                   "dirty_fraction": round(float(frac), 6),
+                   "dirty_rows": int(len(res.dirty_rows)),
+                   "tiles": int(part.num_tiles)},
+            reduce_dim_first=self.reduce_dim_first,
+            partition_bwd=part_bwd, edge_perm_bwd=eperm,
+            epoch=self.epoch + 1)
+        return (plan, res) if return_details else plan
 
     # ---------------- node-order plumbing ----------------
 
@@ -183,6 +320,11 @@ class Plan:
         re-execute; the tuner trace and extracted props are not persisted
         (they are advisory provenance, rebuildable from the graph)."""
         data: dict = {
+            # schema version 2: adds "version" itself + "epoch" (mutable-
+            # graph support).  Loaders treat a missing "version" as the
+            # legacy v1 layout — see `load`.
+            "version": np.asarray(2),
+            "epoch": np.asarray(int(self.epoch)),
             "graph_indptr": self.graph.indptr,
             "graph_indices": self.graph.indices,
             "stats_json": np.frombuffer(
@@ -214,8 +356,14 @@ class Plan:
 
     @classmethod
     def load(cls, path: str) -> "Plan":
-        """Inverse of `save` (tuner/props come back as None)."""
+        """Inverse of `save` (tuner/props come back as None).  Versionless
+        legacy archives load as schema v1 (epoch 0); archives newer than
+        this code refuse to load rather than misread fields."""
         z = np.load(path)
+        version = int(z["version"]) if "version" in z else 1
+        if version > 2:
+            raise ValueError(f"plan npz schema version {version} is newer "
+                             f"than this runtime (max 2)")
 
         def part(prefix):
             if f"{prefix}_nbrs" not in z:
@@ -247,4 +395,5 @@ class Plan:
             partition_bwd=part("b"),
             edge_perm_bwd=(z["edge_perm_bwd"] if "edge_perm_bwd" in z
                            else None),
+            epoch=int(z["epoch"]) if "epoch" in z else 0,
         )

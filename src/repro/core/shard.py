@@ -29,7 +29,7 @@ from repro.core.plan import Plan
 from repro.graphs.csr import CSRGraph
 
 __all__ = ["PlanShards", "ShardSpec", "halo_sources", "shard_graph",
-           "shard_plan"]
+           "shard_plan", "update_shards"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +124,16 @@ class PlanShards:
     def num_shards(self) -> int:
         return self.spec.num_shards
 
+    def apply_delta(self, delta, **kwargs) -> "PlanShards":
+        """Apply a `GraphDelta` to the parent plan (incrementally —
+        `Plan.apply_delta`) and recompute only the sub-plans whose node
+        ranges intersect the dirty set; every other shard's `Plan` OBJECT
+        is reused, keeping its device-resident schedules and the sharded
+        executor's jit cache warm.  Returns a new `PlanShards`."""
+        parent2, res = self.parent.apply_delta(delta, return_details=True,
+                                               **kwargs)
+        return update_shards(self, parent2, res.dirty_rows)
+
     def stats(self) -> dict:
         """Shard balance + halo metrics (the multi-device analogue of
         `partition_stats`): edge balance drives per-device work, halo
@@ -188,8 +198,119 @@ def shard_plan(plan: Plan, num_shards: int, *,
         Plan(graph=sub, partition=pf, config=cfg, graph_props=None,
              arch=plan.arch, perm=None, tuner=None, stats={},
              reduce_dim_first=plan.reduce_dim_first,
-             partition_bwd=pb, edge_perm_bwd=ep)
+             partition_bwd=pb, edge_perm_bwd=ep, epoch=plan.epoch)
         for sub, pf, pb, ep in zip(subs, parts, parts_bwd, edge_perms)
     ]
     return PlanShards(parent=plan, spec=spec, plans=plans,
                       halo=halo_sources(g, spec), edge_ranges=edge_ranges)
+
+
+def _shard_sub_plan(parent: Plan, sub: CSRGraph, vals, with_backward: bool):
+    """One shard's sub-plan under the parent config (unpadded tiles)."""
+    cfg = parent.config
+    part = partition_graph(sub, gs=cfg.gs, gpt=cfg.gpt, ont=cfg.ont,
+                           src_win=cfg.src_win, edge_vals=vals)
+    part_bwd = eperm = None
+    if with_backward:
+        gT, vals_t, eperm = transpose_graph(sub, vals)
+        part_bwd = partition_graph(gT, gs=cfg.gs, gpt=cfg.gpt, ont=cfg.ont,
+                                   src_win=cfg.src_win, edge_vals=vals_t)
+    return Plan(graph=sub, partition=part, config=cfg, graph_props=None,
+                arch=parent.arch, perm=None, tuner=None, stats={},
+                reduce_dim_first=parent.reduce_dim_first,
+                partition_bwd=part_bwd, edge_perm_bwd=eperm,
+                epoch=parent.epoch)
+
+
+def _patch_shard_values(plan_sub: Plan, vals: Optional[np.ndarray]) -> Plan:
+    """Value-only shard refresh: the sub-graph's STRUCTURE is unchanged but
+    its per-edge values are not (GCN degree normalization reaches rows the
+    delta never touched structurally).  Rebuilds just the (T, gpt, gs)
+    value tensors through the existing slot maps — no repartitioning."""
+    p = plan_sub.partition
+    flat = np.zeros((p.num_tiles * p.gpt, p.gs), np.float32)
+    flat[p.edge_slot, p.edge_pos] = (1.0 if vals is None
+                                     else np.asarray(vals, np.float32))
+    part = dataclasses.replace(
+        p, edge_val=flat.reshape(p.num_tiles, p.gpt, p.gs))
+    pb = plan_sub.partition_bwd
+    if pb is not None:
+        vt = (np.ones(pb.num_edges, np.float32) if vals is None
+              else np.asarray(vals, np.float32))[plan_sub.edge_perm_bwd]
+        flatb = np.zeros((pb.num_tiles * pb.gpt, pb.gs), np.float32)
+        flatb[pb.edge_slot, pb.edge_pos] = vt
+        pb = dataclasses.replace(
+            pb, edge_val=flatb.reshape(pb.num_tiles, pb.gpt, pb.gs))
+    return dataclasses.replace(plan_sub, partition=part, partition_bwd=pb)
+
+
+def update_shards(shards: PlanShards, parent2: Plan,
+                  dirty_rows: np.ndarray) -> PlanShards:
+    """Incremental re-shard: given the updated parent plan and the delta's
+    dirty destination rows (both from ``Plan.apply_delta(...,
+    return_details=True)``, ids in the parent's plan order), rebuild ONLY
+    the sub-plans whose node range intersects the dirty set.
+
+    A shard's sub-plan content — forward AND backward, halo included —
+    depends only on its own rows' adjacency and values (the backward pair
+    transposes the shard-local sub-graph), so structurally clean shards are
+    reused as the SAME `Plan` objects: their cached `DeviceSchedule`s stay
+    device-resident and the sharded executor's stacked operands keep their
+    shapes.  Clean shards whose per-edge VALUES changed (GCN normalization
+    after a neighbor's degree moved) get a value-only tensor refresh.  If
+    the mutated graph outgrew the shard geometry (``num_nodes >
+    spec.padded_nodes``), the whole split is recomputed from scratch."""
+    spec = shards.spec
+    g2 = parent2.graph
+    n2 = g2.num_nodes
+    if n2 > spec.padded_nodes:
+        return shard_plan(parent2, spec.num_shards)
+    spec2 = dataclasses.replace(spec, num_nodes=n2)
+    with_backward = parent2.partition_bwd is not None
+
+    edge_vals = parent2.partition.edge_values_csr()
+    if edge_vals is not None and np.all(edge_vals == 1.0):
+        edge_vals = None
+    subs, sub_vals, edge_ranges = shard_graph(g2, spec2, edge_vals)
+
+    dirty = np.zeros(spec.num_shards, dtype=bool)
+    if len(dirty_rows):
+        dirty[np.asarray(dirty_rows, np.int64) // spec.n_local] = True
+
+    plans2, halo2 = [], []
+    for p in range(spec.num_shards):
+        old = shards.plans[p]
+        if not dirty[p]:
+            halo2.append(shards.halo[p])      # clean rows read the same srcs
+            new_vals, old_vals = sub_vals[p], old.partition.edge_values_csr()
+            if new_vals is None:
+                same = old_vals is None or bool(np.all(old_vals == 1.0))
+            else:
+                same = old_vals is not None and np.array_equal(new_vals,
+                                                               old_vals)
+            plans2.append(old if same
+                          else _patch_shard_values(old, new_vals))
+            continue
+        plans2.append(_shard_sub_plan(parent2, subs[p], sub_vals[p],
+                                      with_backward))
+        lo, hi = p * spec.n_local, (p + 1) * spec.n_local
+        e_lo, e_hi = int(g2.indptr[min(lo, n2)]), int(g2.indptr[min(hi, n2)])
+        srcs = np.unique(g2.indices[e_lo:e_hi])
+        halo2.append(srcs[(srcs < lo) | (srcs >= hi)].astype(np.int64))
+
+    # uniformize tile counts; clean shards keep their objects when the
+    # rebuilt shards fit under the existing padding
+    t_f = max(pl.partition.num_tiles for pl in plans2)
+    t_b = (max(pl.partition_bwd.num_tiles for pl in plans2)
+           if with_backward else 0)
+    out = []
+    for pl in plans2:
+        pf, pb = pl.partition, pl.partition_bwd
+        if pf.num_tiles < t_f or (pb is not None and pb.num_tiles < t_b):
+            pl = dataclasses.replace(
+                pl, partition=pad_partition_tiles(pf, t_f),
+                partition_bwd=(None if pb is None
+                               else pad_partition_tiles(pb, t_b)))
+        out.append(pl)
+    return PlanShards(parent=parent2, spec=spec2, plans=out, halo=halo2,
+                      edge_ranges=edge_ranges)

@@ -111,6 +111,15 @@ class CSRGraph:
         rows = np.repeat(np.arange(self.num_nodes, dtype=np.int32), self.degrees)
         return rows, self.indices.copy()
 
+    def apply_delta(self, delta):
+        """Apply a `repro.graphs.delta.GraphDelta`: returns a `DeltaResult`
+        carrying the new CSR (``.graph``), the affected destination rows
+        (``.dirty_rows``), and the per-edge provenance map incremental plan
+        maintenance consumes (``.edge_origin`` — docs/dynamic.md).  This
+        graph is left untouched."""
+        from repro.graphs.delta import apply_delta
+        return apply_delta(self, delta)
+
 
 def from_edges(num_nodes: int, src: np.ndarray, dst: np.ndarray,
                symmetrize: bool = False, dedup: bool = True) -> CSRGraph:

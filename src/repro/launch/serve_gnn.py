@@ -44,6 +44,17 @@ def build_trace(num_nodes: int, requests: int, *, zipf: float = 1.1,
                       hot_fraction=hot_fraction, seed=seed)
 
 
+def _delta_stream(args, g):
+    """Pre-draw the synthetic mutation stream for ``--stream-deltas``
+    (docs/dynamic.md): ~1% of the resident edges per delta, new nodes
+    carrying random features at the serving width."""
+    from repro.graphs.datasets import interaction_stream
+    return list(interaction_stream(
+        g, num_batches=args.stream_deltas,
+        edges_per_batch=max(16, g.num_edges // 100),
+        feat_dim=args.in_dim, seed=args.seed))
+
+
 def _write_trace(args, tracer) -> None:
     """--trace-out: span records as a Chrome/Perfetto trace JSON (open in
     ui.perfetto.dev or chrome://tracing — docs/observability.md)."""
@@ -77,6 +88,10 @@ def _serve_async(args, g, feat, cfg, registry, tracer):
             with tracer.span("serve_sharded", block=True,
                              batch=len(seeds)) as sp:
                 return sp.sync(sharded_fn(seeds))
+
+        # the tracer wrapper hides the executor's mutation handler from
+        # AsyncServingEngine's resolution — re-expose it
+        serve_fn.update_graph = sharded_fn.update_graph
     else:
         sync = ServingEngine(
             g, feat, cfg,
@@ -113,8 +128,37 @@ def _serve_async(args, g, feat, cfg, registry, tracer):
                     rate_rps=(math.inf if args.rate <= 0 else args.rate),
                     zipf=args.zipf, tenants=tuple(t.name for t in tenants),
                     seed=args.seed)
-    res = run_schedule(engine, build_schedule(g.num_nodes, spec))
-    reqs = res["requests_detail"]
+    schedule = build_schedule(g.num_nodes, spec)
+    if args.stream_deltas:
+        # interleave graph mutations with the replay: the engine applies
+        # each delta between fired batches (no request is dropped), and
+        # only the final chunk is eligible for the verify cross-check
+        # (earlier results answer against earlier snapshots)
+        stream = _delta_stream(args, g)
+        cuts = np.linspace(0, len(schedule), args.stream_deltas + 2
+                           ).astype(int)
+        parts, reqs, drained, completed, wall = [], [], True, 0, 0.0
+        for ci in range(args.stream_deltas + 1):
+            if ci:
+                if not engine.update_graph(stream[ci - 1]).wait(60.0):
+                    print("[serve_gnn] FAIL: graph update not applied")
+                    drained = False
+            part = run_schedule(engine, schedule[cuts[ci]:cuts[ci + 1]])
+            parts.append(part)
+            reqs = part["requests_detail"]
+            drained = drained and part["drained"]
+            completed += part["completed"]
+            wall += part["wall_s"]
+        all_reqs = [r for p in parts for r in p["requests_detail"]]
+        res = {"requests": len(all_reqs), "completed": completed,
+               "wall_s": wall, "throughput_rps": completed / max(wall, 1e-9),
+               "drained": drained, "requests_detail": all_reqs}
+        print(f"[serve_gnn] applied {args.stream_deltas} deltas "
+              f"(updates="
+              f"{int(engine.registry.counter('serve_graph_updates_total').value)})")
+    else:
+        res = run_schedule(engine, schedule)
+        reqs = res["requests_detail"]
     acc = engine.accounting()
     summary = engine.summary()
     engine.close()
@@ -207,6 +251,10 @@ def main(argv=None) -> int:
     p.add_argument("--rate", type=float, default=500.0,
                    help="offered load in req/s for the async tier "
                         "(<= 0 = burst: all requests at t=0)")
+    p.add_argument("--stream-deltas", type=int, default=0,
+                   help="apply N synthetic interaction-stream deltas to "
+                        "the resident graph, interleaved with the request "
+                        "replay (docs/dynamic.md)")
     p.add_argument("--smoke", action="store_true",
                    help="tiny CI-sized run (overrides --num-nodes, "
                         "--requests, --batch-window, --tune-iters)")
@@ -281,7 +329,23 @@ def main(argv=None) -> int:
 
     trace = build_trace(g.num_nodes, args.requests, zipf=args.zipf,
                         seed=args.seed)
-    reqs = engine.run_trace(trace)
+    if args.stream_deltas:
+        # split the trace into chunks and mutate the resident graph
+        # between them; verify only against the final snapshot's chunk
+        stream = _delta_stream(args, g)
+        cuts = np.linspace(0, len(trace), args.stream_deltas + 2).astype(int)
+        reqs, all_reqs = [], []
+        for ci in range(args.stream_deltas + 1):
+            if ci:
+                engine.update_graph(stream[ci - 1])
+            reqs = engine.run_trace(list(trace[cuts[ci]:cuts[ci + 1]]))
+            all_reqs.extend(reqs)
+        print(f"[serve_gnn] applied {args.stream_deltas} deltas "
+              f"(graph_epoch={engine.graph_epoch}, "
+              f"n={engine.graph.num_nodes}, "
+              f"invalidations={engine.cache.stats()['invalidations']})")
+    else:
+        reqs = engine.run_trace(trace)
     s = engine.summary()
     c = s["cache"]
     # one registry, one exporter: the stdout stats ARE the JSON metrics
@@ -324,7 +388,8 @@ def main(argv=None) -> int:
         print("[serve_gnn] WARNING: plan-cache hit rate is 0")
         # a short/diverse trace can legitimately never repeat a shape class;
         # only fail when the trace was long enough that caching should bite
-        if args.requests >= 4 * args.batch_window:
+        # (streamed deltas bump the epoch key, legitimately resetting reuse)
+        if args.requests >= 4 * args.batch_window and not args.stream_deltas:
             ok = False
     return 0 if ok else 1
 

@@ -67,6 +67,35 @@ def _write_trace(args, tracer) -> None:
     print(f"[train] wrote Chrome trace -> {args.trace_out}")
 
 
+class _DeltaStream:
+    """Wrap a batch_fn: before step ``k*every`` is served, apply the next
+    `interaction_stream` delta to the loader (docs/dynamic.md).  The swap
+    happens at the loader's safe batch boundary; mutated steps resample
+    from the new snapshot.  Restart-safe: a replayed step does not re-apply
+    its delta (the mutation stream is consumed at most once per step)."""
+
+    def __init__(self, batch_fn, loader, stream, every: int):
+        self.batch_fn = batch_fn
+        self.loader = loader
+        self.stream = stream
+        self.every = every
+        self.applied = 0
+        self._seen: set[int] = set()
+
+    def __call__(self, step: int):
+        if step and step % self.every == 0 and step not in self._seen:
+            self._seen.add(step)
+            delta = next(self.stream, None)
+            if delta is not None:
+                self.loader.update_graph(delta)
+                self.applied += 1
+        return self.batch_fn(step)
+
+    def close(self):
+        close = getattr(self.batch_fn, "close", None)
+        (close or self.loader.close)()
+
+
 class _ShardedBatches:
     """step -> list of `num_shards` loader batches (one per device), and a
     ``close()`` the Trainer forwards to the underlying loader."""
@@ -132,6 +161,17 @@ def _main_gnn_sampled(args) -> int:
     else:
         step_fn = SampledTrainStep(cfg, opt)
         batch_fn = loader
+    if args.stream_deltas:
+        from repro.graphs.datasets import interaction_stream
+        eb = args.stream_edges or max(32, g.num_edges // 100)
+        batch_fn = _DeltaStream(
+            batch_fn, loader,
+            interaction_stream(g, num_batches=args.steps // args.stream_deltas
+                               + 1, edges_per_batch=eb, feat_dim=in_dim,
+                               seed=args.seed),
+            args.stream_deltas)
+        print(f"[train] streaming deltas: every {args.stream_deltas} steps, "
+              f"{eb} edges/batch")
     params = init_gnn_params(cfg, jax.random.PRNGKey(args.seed))
     ckpt_dir = args.ckpt_dir or os.path.join(
         "/tmp", f"repro_train_sampled_{args.arch}_{args.dataset}"
@@ -151,12 +191,15 @@ def _main_gnn_sampled(args) -> int:
     hist = trainer.metrics_history
     losses = (f"first_loss={hist[0]['loss']:.4f} "
               f"last_loss={hist[-1]['loss']:.4f} " if hist else "")
-    cache = loader.stats()["cache"]
+    st = loader.stats()
+    cache = st["cache"]
+    deltas = (f"graph_epoch={st['graph_epoch']} "
+              if st.get("graph_swaps") else "")
     print(f"[train] arch={args.arch} backend={args.backend} "
           f"dtype={args.dtype} sampled "
           f"fanouts={fanouts} batch={args.batch_nodes} "
           f"shards={args.shards} steps={len(hist)} "
-          f"{losses}avg_step={trainer.avg_step_time()*1e3:.1f}ms "
+          f"{losses}{deltas}avg_step={trainer.avg_step_time()*1e3:.1f}ms "
           f"jit_buckets={step_fn.num_buckets} traces={step_fn.traces} "
           f"cache_hit_rate={cache['hit_rate']:.2f} "
           f"wall={time.time()-t1:.1f}s")
@@ -271,6 +314,13 @@ def main(argv=None) -> int:
                    help="comma-separated per-layer fanouts (with --sampled)")
     p.add_argument("--batch-nodes", type=int, default=512,
                    help="seed nodes per sampled mini-batch")
+    p.add_argument("--stream-deltas", type=int, default=0,
+                   help="with --sampled: apply one synthetic interaction-"
+                        "stream delta to the resident graph every N steps "
+                        "(docs/dynamic.md)")
+    p.add_argument("--stream-edges", type=int, default=0,
+                   help="edges per streamed delta (default ~1%% of the "
+                        "seed graph's edges)")
     p.add_argument("--scale", type=float, default=1.0,
                    help="dataset size multiplier (1.0 = paper size)")
     p.add_argument("--hidden-dim", type=int, default=32)
@@ -301,6 +351,9 @@ def main(argv=None) -> int:
 
     if args.sampled and args.arch not in ("gcn", "gin"):
         p.error("--sampled supports gcn/gin only")
+    if args.stream_deltas and not args.sampled:
+        p.error("--stream-deltas requires --sampled (the resident-graph "
+                "loader owns the swap protocol)")
     if args.shards < 1:
         p.error("--shards must be >= 1")
     if args.shards > 1 and args.arch not in ("gcn", "gin"):

@@ -38,7 +38,8 @@ from repro.graphs.subgraph import pad_to_nodes
 from repro.models.gnn import GNNConfig, gnn_block_loss
 from repro.obs import MetricsRegistry
 from repro.sampling.neighbor import SampledBatch, sample_blocks
-from repro.serving.plan_cache import PlanCache, bucket_pow2
+from repro.serving.plan_cache import (PlanCache, bucket_pow2,
+                                      shape_class_fingerprint)
 
 __all__ = ["LoaderConfig", "TrainBatch", "SampledLoader", "SampledTrainStep",
            "ShardedSampledTrainStep", "sampled_agg_config"]
@@ -146,14 +147,26 @@ class SampledLoader:
         self._c_resync = self.registry.counter(
             "loader_resyncs_total",
             desc="prefetch-buffer flushes on out-of-order access (restarts)")
+        self._c_swaps = self.registry.counter(
+            "loader_graph_swaps_total",
+            desc="resident-graph replacements applied at batch boundaries")
+        self._g_epoch = self.registry.gauge(
+            "loader_graph_epoch", desc="delta generation of the resident graph")
+        # sampled blocks are ephemeral subgraphs keyed EXACTLY in the plan
+        # cache; the coarse shape-class fingerprint keeps the config memo
+        # hot across them (a content-aware fingerprint would make every
+        # block a memo miss — see shape_class_fingerprint's docstring)
         self.cache = cache if cache is not None else PlanCache(
             backend=cfg.backend, tune_mode=loader.tune_mode,
             tune_iters=loader.tune_iters, max_entries=loader.max_plans,
             bucket_shapes=loader.bucket_shapes, seed=loader.seed,
             with_backward=with_backward,
             config_fn=None if loader.use_tuner else sampled_agg_config,
+            fingerprint_fn=shape_class_fingerprint,
             feat_dtype=cfg.feat_dtype, registry=self.registry)
         self.edge_mode = "gcn" if cfg.arch == "gcn" else "scale"
+        self._default_train_nodes = train_nodes is None
+        self.graph_epoch = 0
         n = len(self.train_nodes)
         b = min(loader.batch_nodes, n)
         self.steps_per_epoch = max(
@@ -165,6 +178,8 @@ class SampledLoader:
         self._head = 0                  # next step the worker picks up
         self._inflight: Optional[int] = None  # step the worker is computing
         self._last_req = 0              # most recently consumed/requested step
+        self._pending_swap = None       # (g, feat, labels) applied at a
+        #                                 batch boundary (update_graph)
         self._stop = False
         self._err: Optional[BaseException] = None
         self._thread = None
@@ -232,10 +247,88 @@ class SampledLoader:
         self._c_batches.inc()
         return batch
 
+    # ---------------- graph mutation (docs/dynamic.md) ----------------
+
+    def update_graph(self, delta, *, feat: Optional[np.ndarray] = None,
+                     labels: Optional[np.ndarray] = None) -> None:
+        """Swap the resident graph at the next safe batch boundary.
+
+        ``delta`` is a `repro.graphs.delta.GraphDelta`; the new CSR is
+        built here (caller's thread, no lock held) and handed to the
+        prefetch worker, which applies it between ``batch_for`` calls — a
+        batch is never sampled from a half-swapped (graph, feat, labels)
+        triple.  A batch already being built finishes on the old graph
+        (that is the safe boundary, not a torn read).  Features for new
+        nodes come from ``delta.node_feat`` (zeros if absent); pass
+        ``feat``/``labels`` to replace the full arrays instead.  Buffered
+        batches are discarded and rebuilt from the consumer's current
+        step, so ``loader(step)`` stays a pure function of the step index
+        *per graph epoch* — the Trainer restart contract now holds within
+        an epoch of the mutation stream.
+        """
+        res = self.g.apply_delta(delta)
+        g2 = res.graph
+        cfg = self.cfg
+        if feat is not None:
+            feat2 = np.ascontiguousarray(feat, dtype=np.float32)
+        else:
+            feat2 = self.feat
+            if g2.num_nodes > feat2.shape[0]:
+                new = np.zeros((g2.num_nodes - feat2.shape[0], cfg.in_dim),
+                               np.float32)
+                if delta.node_feat is not None:
+                    nf = np.asarray(delta.node_feat, np.float32)
+                    new[:len(nf)] = nf[:, :cfg.in_dim]
+                feat2 = np.concatenate([feat2, new])
+        assert feat2.shape == (g2.num_nodes, cfg.in_dim), \
+            (feat2.shape, g2.num_nodes, cfg.in_dim)
+        if labels is not None:
+            labels2 = np.ascontiguousarray(labels, dtype=np.int32)
+        else:
+            labels2 = self.labels
+            if g2.num_nodes > labels2.shape[0]:
+                labels2 = np.concatenate(
+                    [labels2,
+                     np.zeros(g2.num_nodes - labels2.shape[0], np.int32)])
+        with self._cond:
+            self._pending_swap = (g2, feat2, labels2)
+            if self._thread is None:
+                self._apply_swap_locked()
+            self._cond.notify_all()
+
+    def _apply_swap_locked(self) -> None:
+        """Install a pending swap (``self._cond`` held, worker quiescent)."""
+        if self._pending_swap is None:
+            return
+        self.g, self.feat, self.labels = self._pending_swap
+        self._pending_swap = None
+        if self._default_train_nodes:
+            self.train_nodes = np.arange(self.g.num_nodes, dtype=np.int64)
+        else:
+            # explicit seed sets survive the mutation minus deleted rows'
+            # ids beyond the (possibly shrunk) node range
+            self.train_nodes = self.train_nodes[
+                self.train_nodes < self.g.num_nodes]
+        self._epoch_perm_cache = (-1, None)
+        n = len(self.train_nodes)
+        b = min(self.lc.batch_nodes, n)
+        self.steps_per_epoch = max(
+            n // b if self.lc.drop_last else -(-n // b), 1)
+        # buffered batches were sampled from the old snapshot: drop them
+        # and restart prefetch at the consumer's current step (it may be
+        # blocked waiting for exactly that step — head must not skip it)
+        self._buf.clear()
+        self._head = self._last_req
+        self.graph_epoch += 1
+        self._c_swaps.inc()
+        self._g_epoch.set(self.graph_epoch)
+
     # ---------------- prefetching front ----------------
 
     def __call__(self, step: int) -> TrainBatch:
         if self._thread is None:
+            with self._cond:
+                self._apply_swap_locked()
             return self.batch_for(step)
         t0 = time.perf_counter()
         with self._cond:
@@ -268,8 +361,10 @@ class SampledLoader:
         try:
             while True:
                 with self._cond:
+                    self._apply_swap_locked()  # safe: no batch in flight
                     while not self._stop and len(self._buf) >= self.lc.prefetch:
                         self._cond.wait(timeout=0.5)
+                        self._apply_swap_locked()
                     if self._stop:
                         return
                     step = self._head
@@ -309,6 +404,8 @@ class SampledLoader:
                 "steps_per_epoch": self.steps_per_epoch,
                 "batches_built": int(self._c_batches.value),
                 "resyncs": int(self._c_resync.value),
+                "graph_epoch": self.graph_epoch,
+                "graph_swaps": int(self._c_swaps.value),
                 "sample_p50_ms": self._h_sample.percentile(50) * 1e3,
                 "prefetch_stall_p99_ms": self._h_stall.percentile(99) * 1e3}
 

@@ -43,7 +43,8 @@ from repro.obs import MetricsRegistry, SpanTracer, pow2_bounds
 from repro.serving.admission import AdmissionQueue, AsyncRequest, SLOClass
 from repro.serving.batcher import (ClockBatcher, DeadlineBatcher,
                                    MicroBatcher, Request)
-from repro.serving.plan_cache import PlanCache, bucket_pow2
+from repro.serving.plan_cache import (PlanCache, bucket_pow2,
+                                      shape_class_fingerprint)
 
 __all__ = ["AsyncServingEngine", "ServingConfig", "ServingEngine",
            "TenantSpec", "make_sharded_serve_fn"]
@@ -172,6 +173,11 @@ class ServingEngine:
                     f" engine wants ({cfg.backend}, {cfg.feat_dtype})")
             self.cache = cache
         else:
+            # ego-graph batches are ephemeral and exact-keyed (epoch in the
+            # exact key), so the config memo runs on the shape-class
+            # fingerprint — a tuned config transfers across distinct egos
+            # of the same workload shape, which is where the cache's hit
+            # rate comes from (see shape_class_fingerprint's docstring)
             self.cache = PlanCache(
                 backend=cfg.backend, tune_mode=self.serving.tune_mode,
                 tune_iters=self.serving.tune_iters,
@@ -179,8 +185,16 @@ class ServingEngine:
                 max_configs=self.serving.max_configs,
                 bucket_shapes=self.serving.bucket_shapes,
                 feat_dtype=cfg.feat_dtype,
+                fingerprint_fn=shape_class_fingerprint,
                 registry=self.registry)
         self._closed = False
+        # delta generation of the resident graph; folded into the plan
+        # cache's exact key so pre-mutation plans can never serve a
+        # post-mutation graph (docs/dynamic.md)
+        self.graph_epoch = 0
+        self._g_epoch = self.registry.gauge(
+            "plan_epoch", desc="delta generation of the resident graph "
+                               "the engine's plans are built against")
         self.batcher = MicroBatcher(
             max_batch=self.serving.max_batch,
             max_wait=(np.inf if self.serving.max_wait is None
@@ -218,7 +232,7 @@ class ServingEngine:
                 ent = self.cache.get_or_build(
                     sub, arch=cfg.arch, in_dim=cfg.in_dim,
                     hidden_dim=cfg.hidden_dim, num_layers=cfg.num_layers,
-                    edge_vals=vals)
+                    edge_vals=vals, epoch=self.graph_epoch)
                 if ent.apply_fn is None:
                     ent.apply_fn = self._make_apply(ent)
             feat_sub = np.zeros((sub.num_nodes, cfg.in_dim), np.float32)
@@ -277,6 +291,53 @@ class ServingEngine:
         else:
             self._jit_cache.move_to_end(key)
         return lambda params, feat, _args=args: shared(params, feat, _args)
+
+    # ---------------- graph mutation (docs/dynamic.md) ----------------
+
+    def update_graph(self, delta, *, feat: Optional[np.ndarray] = None):
+        """Swap the resident graph to ``delta`` applied to the current
+        snapshot; returns the `repro.graphs.delta.DeltaResult`.
+
+        The engine is thread-free, so the swap is a plain reference
+        replacement: the next `serve_batch` extracts egos from the new
+        snapshot.  (Under `AsyncServingEngine` this runs on the single
+        worker thread between fired batches — the async tier's safe epoch
+        boundary; in-flight batches complete against the old snapshot.)
+        GCN's A-hat weights are recomputed from the new degrees; features
+        for new nodes come from ``delta.node_feat`` (zeros if absent), or
+        pass ``feat`` to replace the whole matrix.  ``graph_epoch`` is
+        bumped (part of every plan-cache exact key, so pre-mutation plans
+        cannot be hit) and pre-mutation entries are dropped via
+        ``PlanCache.invalidate(before_epoch=...)`` — on a SHARED cache
+        this also drops other engines' older-epoch entries, which is a
+        rebuild cost, never a correctness issue.
+        """
+        res = self.graph.apply_delta(delta)
+        g2 = res.graph
+        cfg = self.cfg
+        if feat is not None:
+            feat2 = np.ascontiguousarray(feat, dtype=np.float32)
+        else:
+            feat2 = self.feat
+            if g2.num_nodes > feat2.shape[0]:
+                new = np.zeros((g2.num_nodes - feat2.shape[0], cfg.in_dim),
+                               np.float32)
+                if delta.node_feat is not None:
+                    nf = np.asarray(delta.node_feat, np.float32)
+                    new[:len(nf)] = nf[:, :cfg.in_dim]
+                feat2 = np.concatenate([feat2, new])
+        assert feat2.shape == (g2.num_nodes, cfg.in_dim), \
+            (feat2.shape, g2.num_nodes, cfg.in_dim)
+        if cfg.arch == "gcn":
+            src_graph, src_vals = gcn_edge_values(g2)
+        else:
+            src_graph, src_vals = g2, None
+        self.graph, self.feat = g2, feat2
+        self.src_graph, self.src_vals = src_graph, src_vals
+        self.graph_epoch += 1
+        self._g_epoch.set(self.graph_epoch)
+        self.cache.invalidate(before_epoch=self.graph_epoch)
+        return res
 
     # ---------------- request API (micro-batched) ----------------
 
@@ -396,6 +457,11 @@ class TenantSpec:
     extraction + shared `PlanCache`), the result of
     `make_sharded_serve_fn` (multi-device halo-exchange forward), or any
     callable with that contract (tests use stubs).
+
+    ``update_fn(delta)`` optionally names the tenant's graph-mutation
+    handler for `AsyncServingEngine.update_graph`; when absent the engine
+    resolves one from ``serve_fn`` itself (an ``update_graph`` attribute,
+    or the bound `ServingEngine` behind a ``serve_batch`` method).
     """
 
     name: str
@@ -403,6 +469,7 @@ class TenantSpec:
     slo: SLOClass = SLOClass("silver", 0.5)
     max_batch: int = 32            # batch size cap (pow2 bucket cap)
     queue_cap: int = 4096          # admission bound; beyond it -> reject
+    update_fn: Optional[Callable] = None
 
 
 class _TenantState:
@@ -524,6 +591,17 @@ class AsyncServingEngine:
         self._default = next(iter(self._tenants))
         self._next_rid = 0
         self._outstanding = 0          # admitted, not yet terminal
+        # graph mutations queued by update_graph(); the worker applies
+        # them BETWEEN fired batches (the safe epoch boundary — an
+        # in-flight batch always completes against the snapshot it
+        # started on, and no request is dropped by a swap)
+        self._pending_updates: list = []
+        self._c_updates = self.registry.counter(
+            "serve_graph_updates_total",
+            desc="graph deltas applied at batch boundaries")
+        self._c_update_errors = self.registry.counter(
+            "serve_graph_update_errors_total",
+            desc="tenant graph-update handlers that raised")
         self._closing = False
         self._abort = False
         self._worker_done = False
@@ -607,6 +685,8 @@ class AsyncServingEngine:
     def _worker(self):
         try:
             while True:
+                self._apply_updates()         # between batches: no batch
+                #                               in flight, swap is safe
                 with self._cond:
                     ts, batch = None, None
                     while batch is None:
@@ -614,6 +694,8 @@ class AsyncServingEngine:
                         if self._abort:
                             self._reject_queued_locked("shutdown", now)
                             return
+                        if self._pending_updates:
+                            break             # apply, then re-pick
                         if self._closing:
                             ts = self._pick_any_locked()
                             if ts is None:
@@ -627,12 +709,40 @@ class AsyncServingEngine:
                         self._cond.wait(
                             timeout=None if wake is None
                             else max(wake - now, 1e-4))
+                    if batch is None:
+                        continue
                     ts.g_depth.set(ts.batcher.pending())
                 self._run_batch(ts, batch)
         finally:
             with self._cond:
+                for _, _, ev in self._pending_updates:
+                    ev.set()                  # never strand a waiter
+                self._pending_updates.clear()
                 self._worker_done = True
                 self._cond.notify_all()
+
+    def _apply_updates(self) -> None:
+        """Drain and run queued graph updates (worker thread, no batch in
+        flight).  Handlers run OUTSIDE the condition variable — replanning
+        can be long, and admission must not block behind it."""
+        with self._cond:
+            if not self._pending_updates:
+                return
+            updates, self._pending_updates = self._pending_updates, []
+        for handlers, delta, ev in updates:
+            try:
+                for fn in handlers:
+                    try:
+                        fn(delta)
+                    except Exception:                  # noqa: BLE001
+                        # a failed swap leaves that tenant on its old
+                        # snapshot; serving continues, the error is counted
+                        self._c_update_errors.inc()
+                self._c_updates.inc()
+            finally:
+                ev.set()
+        with self._cond:
+            self._cond.notify_all()
 
     def _run_batch(self, ts: _TenantState, batch: list) -> None:
         t0 = time.perf_counter()
@@ -666,6 +776,55 @@ class AsyncServingEngine:
                 (ts.c_slo_met if lat <= slo_s else ts.c_slo_missed).inc()
             self._outstanding -= len(batch)
             self._cond.notify_all()
+
+    # ---------------- graph mutation (docs/dynamic.md) ----------------
+
+    def update_graph(self, delta, tenant: Optional[str] = None
+                     ) -> threading.Event:
+        """Queue a graph mutation; returns an event set once applied.
+
+        The worker thread applies the delta BETWEEN fired batches, so the
+        swap is atomic with respect to serving: every in-flight batch
+        completes against the snapshot it started on, no admitted request
+        is dropped, and the first batch fired after the event is set sees
+        the mutated graph.  ``tenant=None`` updates every tenant that has
+        a handler (deduplicated — tenants sharing one `ServingEngine` or
+        one sharded executor swap once); naming a tenant without a
+        handler raises.  Handler resolution per tenant:
+        ``spec.update_fn`` -> ``serve_fn.update_graph`` attribute -> the
+        `ServingEngine` behind a bound ``serve_batch``.
+        """
+        names = [tenant] if tenant is not None else list(self._tenants)
+        handlers, seen = [], set()
+        for nm in names:
+            spec = self._tenants[nm].spec       # KeyError = caller bug
+            fn = spec.update_fn
+            if fn is None:
+                fn = getattr(spec.serve_fn, "update_graph", None)
+            if fn is None:
+                owner = getattr(spec.serve_fn, "__self__", None)
+                if isinstance(owner, ServingEngine):
+                    fn = owner.update_graph
+            if fn is None:
+                if tenant is not None:
+                    raise ValueError(
+                        f"tenant {tenant!r} has no graph-update handler")
+                continue
+            key = id(getattr(fn, "__self__", fn))
+            if key not in seen:
+                seen.add(key)
+                handlers.append(fn)
+        if not handlers:
+            raise ValueError("no tenant has a graph-update handler")
+        ev = threading.Event()
+        with self._cond:
+            if self._closing:
+                raise RuntimeError("engine is shutting down")
+            self._pending_updates.append((handlers, delta, ev))
+            self._cond.notify_all()
+        if self._thread.ident is None:          # start=False: run inline
+            self._apply_updates()
+        return ev
 
     # ---------------- lifecycle ----------------
 
@@ -770,34 +929,104 @@ def make_sharded_serve_fn(graph: CSRGraph, feat: np.ndarray, cfg: GNNConfig,
     the requested seed rows — numerically identical to single-device
     full-graph inference.  Requires ``num_shards`` visible devices
     (`shard_mesh` raises with the XLA_FLAGS hint otherwise).
+
+    ``serve_fn.update_graph(delta)`` mutates the resident graph in place
+    through the incremental path (`PlanShards.apply_delta` ->
+    `core.shard.update_shards`): only sub-plans intersecting the dirty
+    rows are recomputed, GCN A-hat weights are re-derived from the
+    mutated degrees, and the sharded forward is rebuilt (XLA reuses the
+    compilation when operand shapes are unchanged — the common case,
+    since shard tile padding absorbs small deltas).  `AsyncServingEngine`
+    resolves this attribute as the tenant's graph-update handler.
     """
     from repro.core.advisor import plan_for
     from repro.distributed.graph_shard import make_sharded_logits_fn
+    from repro.graphs.delta import GraphDelta  # noqa: F401 (doc reference)
 
-    if cfg.arch == "gcn":
-        src_graph, src_vals = gcn_edge_values(graph)
-    elif cfg.arch == "gin":
-        src_graph, src_vals = graph, None
-    else:
+    def _split(g: CSRGraph):
+        if cfg.arch == "gcn":
+            return gcn_edge_values(g)
+        if cfg.arch == "gin":
+            return g, None
         raise ValueError(
             f"sharded serving supports gcn/gin (static edge values), "
             f"got {cfg.arch!r}")
+
+    src_graph, src_vals = _split(graph)
     plan = plan_for(src_graph, arch=cfg.arch, in_dim=cfg.in_dim,
                     hidden_dim=cfg.hidden_dim, num_layers=cfg.num_layers,
                     edge_vals=src_vals, tune_iters=tune_iters,
                     feat_dtype=cfg.feat_dtype)
     shards = plan.shards(num_shards)
-    logits_fn = make_sharded_logits_fn(cfg, shards, registry=registry)
     if params is None:
         params = init_gnn_params(
             cfg, key if key is not None else jax.random.PRNGKey(0))
-    feat_dev = jnp.asarray(np.ascontiguousarray(feat, dtype=np.float32))
+    state = {
+        "graph": graph,                       # RAW graph (external ids)
+        "shards": shards,
+        "logits_fn": make_sharded_logits_fn(cfg, shards, registry=registry),
+        "feat": np.ascontiguousarray(feat, dtype=np.float32),
+    }
+    state["feat_dev"] = jnp.asarray(state["feat"])
 
     def serve_fn(seeds: Sequence[int]) -> np.ndarray:
-        out = np.asarray(jax.block_until_ready(logits_fn(params, feat_dev)))
+        out = np.asarray(jax.block_until_ready(
+            state["logits_fn"](params, state["feat_dev"])))
         return out[np.asarray(list(seeds), dtype=np.int64)]
+
+    def _ahat_vals(g2_plan: CSRGraph) -> np.ndarray:
+        # A-hat weights derived from the mutated PLAN-ORDER graph itself:
+        # it already carries the self-loops, and per-node degrees are
+        # permutation-invariant, so this reproduces `gcn_edge_values`
+        # exactly without materializing the external-order edge array
+        inv = 1.0 / np.sqrt(np.maximum(g2_plan.degrees.astype(np.float64),
+                                       1.0))
+        rows, cols = g2_plan.to_coo()
+        return (inv[rows] * inv[cols]).astype(np.float32)
+
+    def update_graph(delta):
+        g_old = state["graph"]
+        res = g_old.apply_delta(delta)        # raw snapshot: id space/feat
+        g2 = res.graph
+        if cfg.arch == "gcn":
+            # the plan graph carries self-loops: mirror the delta there,
+            # inserting loops for new nodes and re-inserting them for
+            # del_nodes (node deletion empties the row, the id survives)
+            loops = np.concatenate([
+                np.arange(g_old.num_nodes, g2.num_nodes, dtype=np.int64),
+                np.asarray([] if delta.del_nodes is None else delta.del_nodes,
+                           np.int64).ravel()])
+            add_src = np.asarray(
+                [] if delta.add_src is None else delta.add_src,
+                np.int64).ravel()
+            add_dst = np.asarray(
+                [] if delta.add_dst is None else delta.add_dst,
+                np.int64).ravel()
+            delta_plan = dataclasses.replace(
+                delta, add_src=np.concatenate([add_src, loops]),
+                add_dst=np.concatenate([add_dst, loops]), add_val=None)
+            shards2 = state["shards"].apply_delta(delta_plan,
+                                                  edge_vals=_ahat_vals)
+        else:
+            shards2 = state["shards"].apply_delta(delta)
+        feat2 = state["feat"]
+        if g2.num_nodes > feat2.shape[0]:
+            new = np.zeros((g2.num_nodes - feat2.shape[0], cfg.in_dim),
+                           np.float32)
+            if delta.node_feat is not None:
+                nf = np.asarray(delta.node_feat, np.float32)
+                new[:len(nf)] = nf[:, :cfg.in_dim]
+            feat2 = np.concatenate([feat2, new])
+        state.update(graph=g2, shards=shards2, feat=feat2,
+                     feat_dev=jnp.asarray(feat2),
+                     logits_fn=make_sharded_logits_fn(cfg, shards2,
+                                                      registry=registry))
+        serve_fn.plan = shards2.parent
+        serve_fn.shards = shards2
+        return res
 
     serve_fn.plan = plan          # introspection for tests/benchmarks
     serve_fn.shards = shards
     serve_fn.params = params
+    serve_fn.update_graph = update_graph
     return serve_fn

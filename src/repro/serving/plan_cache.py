@@ -45,6 +45,7 @@ __all__ = [
     "graph_fingerprint",
     "graph_key",
     "pad_partition_tiles",
+    "shape_class_fingerprint",
 ]
 
 
@@ -54,12 +55,21 @@ def bucket_pow2(x: int, lo: int = 1) -> int:
     return 1 << (x - 1).bit_length()
 
 
-def graph_fingerprint(g: CSRGraph, arch_key: tuple = ()) -> tuple:
+def shape_class_fingerprint(g: CSRGraph, arch_key: tuple = ()) -> tuple:
     """Coarse workload signature: graphs that share it get the same tuned
     config.  Pow2 size buckets + a 16-bin log2-degree histogram quantized to
     1/4ths of the working node count, so near-identical ego-batches collide.
     Isolated nodes are excluded — they carry no aggregation work and their
-    count is mostly shape-bucketing pad."""
+    count is mostly shape-bucketing pad.
+
+    This is deliberately content-BLIND — it names an equivalence class of
+    workload shapes, not a graph.  Use it as a `PlanCache(fingerprint_fn=)`
+    only where every planned graph is ephemeral and exact-keyed anyway (the
+    sampled loader's freshly drawn bipartite blocks, the serving engine's
+    ego-graph batches — both re-key plans exactly, with the graph epoch in
+    the exact key, so the shape-class memo can only ever transfer a tuned
+    CONFIG, never a plan); long-lived mutable graphs planned directly must
+    use the content-aware `graph_fingerprint` default."""
     degs = g.degrees
     degs = degs[degs > 0]
     hist = (np.bincount(np.minimum(np.log2(degs).astype(np.int64), 15),
@@ -69,6 +79,28 @@ def graph_fingerprint(g: CSRGraph, arch_key: tuple = ()) -> tuple:
                  np.round(4.0 * hist / max(len(degs), 1)).astype(np.int64))
     return (bucket_pow2(g.num_nodes), bucket_pow2(max(g.num_edges, 1)),
             frac, tuple(arch_key))
+
+
+def graph_fingerprint(g: CSRGraph, arch_key: tuple = ()) -> tuple:
+    """Content-aware workload signature (the PlanCache default): the shape
+    class of `shape_class_fingerprint` plus a structure digest — exact
+    node/edge counts and strided samples of indptr/indices.  Two copies of
+    the same structure still share it (so a same-shape lookup with
+    different edge VALUES reuses the tuned config), but a mutated graph
+    practically never collides with its pre-mutation self: indptr is
+    cumulative, so even a single inserted or deleted edge shifts every
+    later sampled row pointer.  That is what keeps the config memo and the
+    measured-variant memo from silently serving decisions made for a
+    different graph after a `GraphDelta` lands."""
+    h = hashlib.blake2b(digest_size=8)
+    h.update(np.int64([g.num_nodes, g.num_edges]).tobytes())
+    if g.num_nodes:
+        h.update(np.ascontiguousarray(
+            g.indptr[::max(1, g.num_nodes // 1024)]).tobytes())
+    if g.num_edges:
+        h.update(np.ascontiguousarray(
+            g.indices[::max(1, g.num_edges // 1024)]).tobytes())
+    return shape_class_fingerprint(g, arch_key) + (h.hexdigest(),)
 
 
 def graph_key(g: CSRGraph, edge_vals: Optional[np.ndarray],
@@ -95,6 +127,11 @@ class CacheEntry:
     apply_fn: Optional[Callable] = None   # engine-installed jitted forward
     hits: int = 0
     extras: dict = dataclasses.field(default_factory=dict)
+    # keyed-invalidation handles (docs/dynamic.md): the fingerprint the
+    # entry was built under and the graph epoch the caller stamped
+    # (`get_or_build(epoch=...)`) — `invalidate()` selects on these.
+    fingerprint: Optional[tuple] = None
+    epoch: int = 0
 
 
 class PlanCache:
@@ -124,8 +161,15 @@ class PlanCache:
                  measure_variants: bool = False,
                  variant_candidates: Optional[tuple] = None,
                  variant_measure_iters: int = 3,
+                 fingerprint_fn: Callable = graph_fingerprint,
                  registry: Optional[MetricsRegistry] = None):
         self.backend = backend
+        # fingerprint_fn: (CSRGraph, arch_key) -> hashable — the config/
+        # variant memo key.  Default is the content-aware
+        # `graph_fingerprint`; the sampled loader opts into the coarser
+        # `shape_class_fingerprint` (see its docstring for why that is
+        # safe there and nowhere else).
+        self.fingerprint_fn = fingerprint_fn
         self.tune_mode = tune_mode
         self.tune_iters = tune_iters
         # feat_dtype: the dtype policy every built plan carries — part of
@@ -179,6 +223,7 @@ class PlanCache:
         self.misses = 0
         self.evictions = 0
         self.config_evictions = 0
+        self.invalidations = 0
         # observability: the int attributes above stay the source of truth
         # for stats() (back-compat); the registry mirrors them as counters
         # and adds what ints can't carry — build-time distribution, tuner
@@ -198,6 +243,9 @@ class PlanCache:
         self._c_cfg_evict = self.registry.counter(
             "plan_cache_config_evictions_total",
             desc="config-memo LRU evictions")
+        self._c_invalidate = self.registry.counter(
+            "plan_cache_invalidations_total",
+            desc="entries dropped by keyed invalidation (graph mutations)")
         self._h_build = self.registry.histogram(
             "plan_cache_build_seconds",
             desc="plan_for + tile padding + executor build on the miss path")
@@ -209,20 +257,27 @@ class PlanCache:
 
     def get_or_build(self, g: CSRGraph, *, arch: str, in_dim: int,
                      hidden_dim: int, num_layers: int,
-                     edge_vals: Optional[np.ndarray] = None) -> CacheEntry:
+                     edge_vals: Optional[np.ndarray] = None,
+                     epoch: Optional[int] = None) -> CacheEntry:
         with self._lock:
             return self._get_or_build_locked(
                 g, arch=arch, in_dim=in_dim, hidden_dim=hidden_dim,
-                num_layers=num_layers, edge_vals=edge_vals)
+                num_layers=num_layers, edge_vals=edge_vals, epoch=epoch)
 
     def _get_or_build_locked(self, g: CSRGraph, *, arch: str, in_dim: int,
                              hidden_dim: int, num_layers: int,
-                             edge_vals: Optional[np.ndarray] = None
+                             edge_vals: Optional[np.ndarray] = None,
+                             epoch: Optional[int] = None
                              ) -> CacheEntry:
         arch_key = (arch, in_dim, hidden_dim, num_layers,
                     self.feat_dtype) + (
             ("bwd",) if self.with_backward else ())
-        key = graph_key(g, edge_vals, arch_key)
+        # the graph epoch (mutable resident graphs — docs/dynamic.md) is
+        # part of the EXACT key only: a plan may never be served across a
+        # mutation boundary, but the shape-class config memo transfers.
+        exact_key = arch_key if epoch is None else arch_key + ("epoch",
+                                                               epoch)
+        key = graph_key(g, edge_vals, exact_key)
         ent = self._plans.get(key)
         if ent is not None:
             self._plans.move_to_end(key)
@@ -231,7 +286,7 @@ class PlanCache:
             ent.hits += 1
             return ent
 
-        fp = graph_fingerprint(g, arch_key)
+        fp = self.fingerprint_fn(g, arch_key)
         config = self._configs.get(fp)
         if config is not None:
             self._configs.move_to_end(fp)
@@ -271,7 +326,8 @@ class PlanCache:
                                        partition_bwd=part_bwd)
         if self.measure_variants:
             plan = self._apply_measured_variant(plan, fp)
-        ent = CacheEntry(plan=plan, executor=plan.executor(self.backend))
+        ent = CacheEntry(plan=plan, executor=plan.executor(self.backend),
+                         fingerprint=fp, epoch=0 if epoch is None else epoch)
         self._h_build.observe(time.perf_counter() - t_build)
         self.registry.counter(
             "plan_cache_builds_total", labels={"source": source},
@@ -318,6 +374,48 @@ class PlanCache:
                 plan, config=dataclasses.replace(plan.config, variant=variant))
         return plan
 
+    def invalidate(self, fingerprint: Optional[tuple] = None, *,
+                   before_epoch: Optional[int] = None) -> int:
+        """Keyed invalidation after a graph mutation (docs/dynamic.md).
+
+        ``fingerprint``: drop the ready plans built under that fingerprint
+        plus its config-memo and measured-variant entries.  ``before_epoch``:
+        drop every ready plan stamped with an earlier graph epoch (the
+        serving engine's swap protocol — entries for egos of the
+        pre-mutation snapshot), plus ALL measured-variant entries (they
+        were measured on pre-mutation schedules); the config memo is kept,
+        a shape-class tuning decision survives content changes.  With
+        neither selector the whole cache (all three levels) is dropped.
+        Returns the number of entries removed; each removal counts into
+        ``plan_cache_invalidations_total``."""
+        with self._lock:
+            n = 0
+            for key in list(self._plans):
+                ent = self._plans[key]
+                if fingerprint is not None and ent.fingerprint != fingerprint:
+                    continue
+                if before_epoch is not None and ent.epoch >= before_epoch:
+                    continue
+                del self._plans[key]
+                n += 1
+            if fingerprint is not None:
+                if self._configs.pop(fingerprint, None) is not None:
+                    n += 1
+                for vk in list(self._variants):
+                    if vk[:-1] == fingerprint:
+                        del self._variants[vk]
+                        n += 1
+            elif before_epoch is not None:
+                n += len(self._variants)
+                self._variants.clear()
+            else:
+                n += len(self._configs) + len(self._variants)
+                self._configs.clear()
+                self._variants.clear()
+            self.invalidations += n
+            self._c_invalidate.inc(n)
+            return n
+
     def _set_config(self, fp: tuple, config: AggConfig) -> None:
         with self._lock:
             self._configs[fp] = config
@@ -355,6 +453,7 @@ class PlanCache:
             "configs": self.num_configs,
             "evictions": self.evictions,
             "config_evictions": self.config_evictions,
+            "invalidations": self.invalidations,
             "variant_selections": self.variant_selections,
             "variant_memo_hits": self.variant_memo_hits,
         }

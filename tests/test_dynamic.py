@@ -1,0 +1,388 @@
+"""Mutable-graph tests: delta ingestion, incremental plan maintenance,
+serialization, and the dynamic serving/sharding adoption layers.
+
+The load-bearing property throughout: an INCREMENTALLY maintained plan
+(`Plan.apply_delta`, `PlanShards.apply_delta`, `ServingEngine.update_graph`)
+must be indistinguishable — to the kernels — from a plan rebuilt from
+scratch on the mutated graph (docs/dynamic.md)."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.advisor import plan_for  # noqa: E402
+from repro.graphs.csr import from_edges, random_power_law  # noqa: E402
+from repro.graphs.datasets import interaction_stream  # noqa: E402
+from repro.graphs.delta import (GraphDelta, apply_delta,  # noqa: E402
+                                carry_edge_values)
+from repro.kernels.ops import aggregate  # noqa: E402
+from repro.models.gnn import gcn_edge_values  # noqa: E402
+
+TOL = 1e-5
+
+
+def _edge_set(g):
+    rows = np.repeat(np.arange(g.num_nodes), g.degrees)
+    return sorted(zip(rows.tolist(), g.indices.tolist()))
+
+
+def _rand_graph(rng, n=None):
+    n = n or int(rng.integers(8, 64))
+    e = int(rng.integers(0, 5 * n))
+    return from_edges(n, rng.integers(0, n, e), rng.integers(0, n, e)), n
+
+
+def _rand_delta(rng, g, n_new=None):
+    n_new = int(rng.integers(0, 4)) if n_new is None else n_new
+    n2 = g.num_nodes + n_new
+    na = int(rng.integers(0, 30))
+    a_src, a_dst = rng.integers(0, n2, na), rng.integers(0, n2, na)
+    d_src = d_dst = None
+    nd = int(rng.integers(0, 8))
+    if g.num_edges and nd:
+        rows = np.repeat(np.arange(g.num_nodes), g.degrees)
+        eid = rng.integers(0, g.num_edges, nd)
+        d_src, d_dst = g.indices[eid].astype(np.int64), rows[eid]
+    dn = (rng.choice(n2, size=int(rng.integers(0, 3)), replace=False)
+          if rng.random() < 0.5 else None)
+    return GraphDelta(num_new_nodes=n_new, add_src=a_src, add_dst=a_dst,
+                      add_val=rng.random(na).astype(np.float32),
+                      del_src=d_src, del_dst=d_dst, del_nodes=dn)
+
+
+# ---------------------------------------------------------------- deltas
+
+
+def test_apply_delta_matches_brute_force():
+    """Edge multiset, edge_origin pointers, clean-row verbatimness, and
+    value carry all agree with a per-edge reference implementation."""
+    rng = np.random.default_rng(11)
+    for _ in range(25):
+        g, n = _rand_graph(rng)
+        delta = _rand_delta(rng, g)
+        res = apply_delta(g, delta)
+        g2 = res.graph
+        n2 = n + delta.num_new_nodes
+
+        old_pairs = list(zip(np.repeat(np.arange(n), g.degrees).tolist(),
+                             g.indices.tolist()))
+        dels = (set(zip(delta.del_dst.tolist(), delta.del_src.tolist()))
+                if delta.del_src is not None else set())
+        gone = (set(np.asarray(delta.del_nodes).tolist())
+                if delta.del_nodes is not None else set())
+        surv = [(r, c) for r, c in old_pairs
+                if (r, c) not in dels and r not in gone and c not in gone]
+        exist, ins = set(surv), []
+        for s, d in zip(delta.add_src.tolist(), delta.add_dst.tolist()):
+            if (d, s) not in exist:
+                exist.add((d, s))
+                ins.append((d, s))
+        assert _edge_set(g2) == sorted(surv + ins)
+
+        rows2 = np.repeat(np.arange(n2), g2.degrees)
+        m = res.edge_origin >= 0
+        for i in np.flatnonzero(m):
+            assert old_pairs[res.edge_origin[i]] == (rows2[i], g2.indices[i])
+        dirty = set(res.dirty_rows.tolist())
+        for r in range(n):
+            if r not in dirty:
+                np.testing.assert_array_equal(
+                    g2.indices[g2.indptr[r]:g2.indptr[r + 1]],
+                    g.indices[g.indptr[r]:g.indptr[r + 1]])
+        ev = rng.random(max(g.num_edges, 1)).astype(np.float32)[:g.num_edges]
+        ev2 = carry_edge_values(res, ev)
+        np.testing.assert_array_equal(ev2[m], ev[res.edge_origin[m]])
+
+
+def test_empty_delta_is_identity():
+    rng = np.random.default_rng(1)
+    g, _ = _rand_graph(rng)
+    res = apply_delta(g, GraphDelta())
+    assert _edge_set(res.graph) == _edge_set(g)
+    assert len(res.dirty_rows) == 0
+    np.testing.assert_array_equal(res.edge_origin, np.arange(g.num_edges))
+
+
+def test_duplicate_insertions_dedup_keeps_first_value():
+    g = from_edges(4, [0], [1])
+    res = apply_delta(g, GraphDelta(
+        add_src=[2, 2, 3], add_dst=[3, 3, 2], add_val=[5.0, 9.0, 2.0]))
+    assert _edge_set(res.graph) == [(1, 0), (2, 3), (3, 2)]
+    ins = res.inserted_val[res.edge_origin < 0]
+    assert sorted(ins.tolist()) == [2.0, 5.0]
+
+
+def test_isolated_new_nodes_extend_id_space():
+    g = from_edges(4, [0, 1], [1, 2])
+    res = apply_delta(g, GraphDelta(num_new_nodes=3))
+    assert res.graph.num_nodes == 7
+    assert _edge_set(res.graph) == _edge_set(g)
+    assert len(res.dirty_rows) == 0
+
+
+def test_del_nodes_empties_both_directions():
+    g = from_edges(5, [0, 1, 2, 3], [1, 2, 3, 4])
+    res = apply_delta(g, GraphDelta(del_nodes=[2]))
+    assert _edge_set(res.graph) == [(1, 0), (4, 3)]
+    assert res.graph.num_nodes == 5          # the id survives, isolated
+
+
+# ------------------------------------- incremental == scratch equivalence
+
+
+def _ahat_vals(g2):
+    inv = 1.0 / np.sqrt(np.maximum(g2.degrees, 1))
+    rows = np.repeat(np.arange(g2.num_nodes), g2.degrees)
+    return (inv[rows] * inv[g2.indices]).astype(np.float32)
+
+
+def _gcn_delta(plan, delta):
+    """Mirror a raw delta onto a self-loop-carrying plan graph: new nodes
+    need their loop inserted, del_nodes need theirs re-inserted (emptying
+    the row also removed (i, i), but the node id survives)."""
+    n = plan.graph.num_nodes
+    loops = np.concatenate([
+        np.arange(n, n + delta.num_new_nodes, dtype=np.int64),
+        np.asarray([] if delta.del_nodes is None else delta.del_nodes,
+                   np.int64)])
+    return dataclasses.replace(
+        delta,
+        add_src=np.concatenate([np.ravel(delta.add_src), loops]),
+        add_dst=np.concatenate([np.ravel(delta.add_dst), loops]),
+        add_val=None)
+
+
+def _agg_parity(plan_a, plan_b, seed=5):
+    n = plan_a.graph.num_nodes
+    feat = jnp.asarray(np.random.default_rng(seed)
+                       .standard_normal((n, 8)).astype(np.float32))
+    err = float(jnp.abs(aggregate(feat, plan_a.sched(), backend="xla")
+                        - aggregate(feat, plan_b.sched(), backend="xla")
+                        ).max())
+    if plan_a.partition_bwd is not None:
+        err = max(err, float(jnp.abs(
+            aggregate(feat, plan_a.sched_bwd(), backend="xla")
+            - aggregate(feat, plan_b.sched_bwd(), backend="xla")).max()))
+    return err
+
+
+@pytest.mark.parametrize("arch,with_backward", [
+    ("gin", False), ("gin", True), ("gcn", False), ("gcn", True)])
+def test_incremental_matches_scratch(arch, with_backward):
+    """Chained stream deltas: the patched plan aggregates exactly like a
+    same-config scratch rebuild — static unit values (gin) and delta-
+    dependent A-hat values (gcn), forward and transposed backward."""
+    for seed in (0, 3):
+        g = random_power_law(700 + 211 * seed, 8.0, seed=seed)
+        gg, ev = gcn_edge_values(g) if arch == "gcn" else (g, None)
+        plan = plan_for(gg, arch=arch, in_dim=8, hidden_dim=8, num_layers=2,
+                        edge_vals=ev, tune_iters=2,
+                        with_backward=with_backward)
+        for delta in interaction_stream(gg, num_batches=3,
+                                        edges_per_batch=50, seed=seed):
+            # threshold=1.0 pins the patched path — on graphs this small a
+            # 50-edge batch can exceed the default dirty-fraction fallback
+            if arch == "gcn":
+                plan2 = plan.apply_delta(_gcn_delta(plan, delta),
+                                         edge_vals=_ahat_vals, threshold=1.0)
+                ev2 = _ahat_vals(plan2.graph)
+            else:
+                plan2 = plan.apply_delta(delta, threshold=1.0)
+                ev2 = None
+            assert plan2.stats["incremental"] == "patched"
+            assert plan2.epoch == plan.epoch + 1
+            scratch = plan_for(plan2.graph, arch=arch, in_dim=8,
+                               hidden_dim=8, num_layers=2, edge_vals=ev2,
+                               config=plan.config,
+                               with_backward=with_backward)
+            assert _agg_parity(plan2, scratch) <= TOL
+            plan = plan2
+
+
+def test_fallback_above_threshold_still_exact():
+    rng = np.random.default_rng(7)
+    g = random_power_law(400, 6.0, seed=2)
+    plan = plan_for(g, arch="gin", in_dim=8, hidden_dim=8, num_layers=2,
+                    tune_iters=2, with_backward=True)
+    # touch most rows -> dirty fraction above the default 0.25 threshold
+    big = GraphDelta(add_src=rng.integers(0, 400, 1200),
+                     add_dst=rng.integers(0, 400, 1200))
+    plan2 = plan.apply_delta(big)
+    assert plan2.stats["incremental"] == "fallback"
+    scratch = plan_for(plan2.graph, arch="gin", in_dim=8, hidden_dim=8,
+                       num_layers=2, config=plan.config, with_backward=True)
+    assert _agg_parity(plan2, scratch) <= TOL
+
+
+def test_shards_apply_delta_dirty_only():
+    """PlanShards.apply_delta recomputes only dirty shards (clean shard
+    Plan objects are reused by identity) and matches a scratch reshard."""
+    g = random_power_law(600, 7.0, seed=4)
+    plan = plan_for(g, arch="gin", in_dim=8, hidden_dim=8, num_layers=2,
+                    tune_iters=2)
+    shards = plan.shards(4)
+    # delta confined to the first shard's node range
+    lo, hi = 0, shards.spec.bounds[1] if hasattr(shards.spec, "bounds") \
+        else shards.plans[0].graph.num_nodes
+    rng = np.random.default_rng(9)
+    hi = min(hi, 80)
+    delta = GraphDelta(add_src=rng.integers(0, hi, 40),
+                       add_dst=rng.integers(0, hi, 40))
+    shards2 = shards.apply_delta(delta)
+    assert shards2.parent.stats["incremental"] == "patched"
+    reused = sum(a is b for a, b in zip(shards2.plans, shards.plans))
+    assert reused >= 1, "clean shards should be reused by object identity"
+    scratch = shards2.parent.shards(4)
+    for s_inc, s_scr in zip(shards2.plans, scratch.plans):
+        assert _agg_parity(s_inc, s_scr) <= TOL
+
+
+# ---------------------------------------------------- serving adoption
+
+
+def test_serving_engine_update_graph_logits_parity():
+    """ISSUE acceptance at the logits level: an engine that ingested a
+    delta serves the same logits as a fresh engine built on the mutated
+    graph."""
+    from repro.models.gnn import GNNConfig
+    from repro.serving.engine import ServingConfig, ServingEngine
+
+    rng = np.random.default_rng(2)
+    g = random_power_law(500, 6.0, seed=1)
+    feat = rng.standard_normal((g.num_nodes, 8)).astype(np.float32)
+    cfg = GNNConfig(arch="gcn", in_dim=8, hidden_dim=8, num_classes=3,
+                    num_layers=2, backend="xla")
+    key = jax.random.PRNGKey(4)
+    sv = ServingConfig(max_batch=32, tune_iters=2)
+    e1 = ServingEngine(g, feat, cfg, key=key, serving=sv)
+    delta = next(interaction_stream(g, num_batches=1, edges_per_batch=40,
+                                    feat_dim=8, seed=3))
+    e1.update_graph(delta)
+    assert e1.graph_epoch == 1
+
+    g2 = apply_delta(g, delta).graph
+    feat2 = np.concatenate([feat, delta.node_feat]) \
+        if delta.node_feat is not None else feat
+    e2 = ServingEngine(g2, feat2, cfg, key=key, serving=sv)
+    nodes = rng.choice(g2.num_nodes, size=24, replace=False)
+    out1 = np.asarray(e1.serve_batch(list(nodes)))
+    out2 = np.asarray(e2.serve_batch(list(nodes)))
+    assert float(np.abs(out1 - out2).max()) <= TOL
+
+
+def test_plan_cache_epoch_keys_and_invalidation():
+    from repro.serving.plan_cache import PlanCache
+
+    g = random_power_law(300, 5.0, seed=0)
+    cache = PlanCache(tune_iters=2)
+    kw = dict(arch="gin", in_dim=8, hidden_dim=8, num_layers=2)
+    e0 = cache.get_or_build(g, epoch=0, **kw)
+    assert cache.get_or_build(g, epoch=0, **kw).plan is e0.plan
+    e1 = cache.get_or_build(g, epoch=1, **kw)
+    assert e1.plan is not e0.plan            # epoch folds into the key
+    dropped = cache.invalidate(before_epoch=1)
+    assert dropped >= 1
+    assert cache.get_or_build(g, epoch=1, **kw).plan is e1.plan
+
+
+# ------------------------------------------------- serialization (S2)
+
+
+def test_plan_npz_roundtrip_v2(tmp_path):
+    from repro.core.plan import Plan
+
+    g = random_power_law(300, 5.0, seed=6)
+    plan = plan_for(g, arch="gin", in_dim=8, hidden_dim=8, num_layers=2,
+                    tune_iters=2, with_backward=True)
+    plan = plan.apply_delta(GraphDelta(add_src=[1, 2], add_dst=[3, 4]))
+    path = os.path.join(tmp_path, "plan.npz")
+    plan.save(path)
+    back = Plan.load(path)
+    assert back.epoch == plan.epoch == 1
+    np.testing.assert_array_equal(back.graph.indices, plan.graph.indices)
+    np.testing.assert_array_equal(back.partition.edge_slot,
+                                  plan.partition.edge_slot)
+    assert _agg_parity(back, plan) == 0.0
+
+
+def test_plan_npz_legacy_versionless_loads_as_epoch_zero(tmp_path):
+    from repro.core.plan import Plan
+
+    g = random_power_law(200, 4.0, seed=8)
+    plan = plan_for(g, arch="gin", in_dim=8, hidden_dim=8, num_layers=2,
+                    tune_iters=2)
+    path = os.path.join(tmp_path, "plan.npz")
+    plan.save(path)
+    # simulate a pre-versioning archive: strip the v2-only keys
+    z = dict(np.load(path))
+    z.pop("version")
+    z.pop("epoch")
+    legacy = os.path.join(tmp_path, "legacy.npz")
+    np.savez_compressed(legacy, **z)
+    back = Plan.load(legacy)
+    assert back.epoch == 0
+    assert _agg_parity(back, plan) == 0.0
+
+
+def test_plan_npz_future_version_refuses(tmp_path):
+    from repro.core.plan import Plan
+
+    g = random_power_law(100, 3.0, seed=9)
+    plan = plan_for(g, arch="gin", in_dim=8, hidden_dim=8, num_layers=2,
+                    tune_iters=2)
+    path = os.path.join(tmp_path, "plan.npz")
+    plan.save(path)
+    z = dict(np.load(path))
+    z["version"] = np.asarray(99)
+    future = os.path.join(tmp_path, "future.npz")
+    np.savez_compressed(future, **z)
+    with pytest.raises(ValueError, match="newer"):
+        Plan.load(future)
+
+
+def test_bench_dynamic_document_schema(tmp_path):
+    """The BENCH_dynamic.json contract `tools/validate_metrics.py` enforces
+    in CI: schema + context stamp + full per-row key set + per-row parity
+    bound + a PASSING comparison verdict."""
+    import importlib.util
+    import json
+
+    from benchmarks.bench_dynamic import (CONFIG_KEYS, PARITY_TOL, SCHEMA,
+                                          _comparison)
+
+    path = os.path.join(os.path.dirname(__file__), "..", "tools",
+                        "validate_metrics.py")
+    spec = importlib.util.spec_from_file_location("validate_metrics", path)
+    vm = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(vm)
+
+    row = {k: 1.0 for k in CONFIG_KEYS}
+    row.update(mode="patched", speedup=20.0, parity=0.0)
+    prof = dict(min_speedup=10.0)
+    good = {"schema": SCHEMA, "smoke": False,
+            "context": {"git_sha": "abc123"},
+            "configs": [row], "comparison": _comparison([row], prof)}
+    assert good["comparison"]["pass"] is True
+    p = tmp_path / "BENCH_dynamic.json"
+    p.write_text(json.dumps(good))
+    assert vm.validate_bench_dynamic(str(p)) == []
+    assert vm.main([str(p)]) == 0
+
+    # three independent violations, each individually reported: a row over
+    # the parity bound, a missing key, and a failing comparison verdict
+    bad_row = dict(row, parity=10 * PARITY_TOL)
+    bad_row.pop("dirty_frac")
+    bad = {"schema": SCHEMA, "context": {"git_sha": "abc123"},
+           "configs": [bad_row],
+           "comparison": _comparison([dict(row, speedup=2.0)], prof)}
+    p2 = tmp_path / "BENCH_dynamic_bad.json"
+    p2.write_text(json.dumps(bad))
+    problems = "\n".join(vm.validate_bench_dynamic(str(p2)))
+    assert "parity" in problems
+    assert "dirty_frac" in problems
+    assert "verdict failed" in problems
+    assert vm.main([str(p2)]) == 1

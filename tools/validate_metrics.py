@@ -3,10 +3,17 @@
     PYTHONPATH=src python tools/validate_metrics.py FILE [FILE ...]
 
 ``.json`` files must parse and carry the ``repro.obs/v1`` schema with a
-non-empty ``metrics`` list; files named ``BENCH_serve*.json`` are instead
+non-empty ``metrics`` list (files named ``metrics_serve*`` must also
+carry the mutable-graph instruments ``plan_epoch`` and
+``plan_cache_invalidations_total`` — docs/dynamic.md); files named
+``BENCH_serve*.json`` are instead
 checked against the ``repro.bench_serve/v1`` benchmark document
 (`benchmarks.bench_serve --json-out`): run-context stamp, non-empty
 ``configs`` with the full per-cell key set, and a ``comparison`` verdict;
+files named ``BENCH_dynamic*.json`` against ``repro.bench_dynamic/v1``
+(`benchmarks.bench_dynamic --json-out`) — same structural checks plus the
+per-row incremental-vs-scratch parity bound and a PASSING comparison
+verdict (the dynamic-graph acceptance gate);
 ``.prom`` files must pass `repro.obs.export.lint_prometheus`
 (exposition-format invariants: TYPE-before-samples, cumulative buckets,
 ``_count`` == ``+Inf`` bucket).  Exit non-zero listing every problem —
@@ -47,6 +54,16 @@ def validate_json(path: str) -> list[str]:
                             f"missing 'count'")
     if "context" in doc and not doc["context"].get("git_sha"):
         problems.append(f"{path}: context present but git_sha empty")
+    # serving exports must carry the mutable-graph instruments
+    # (docs/dynamic.md): the resident graph's delta generation and the
+    # keyed-invalidation counter — their absence means the engine lost its
+    # epoch plumbing, not that no deltas happened (both exist at 0)
+    if os.path.basename(path).startswith("metrics_serve"):
+        names = {m.get("name") for m in metrics}
+        for required in ("plan_epoch", "plan_cache_invalidations_total"):
+            if required not in names:
+                problems.append(f"{path}: serving export missing "
+                                f"{required!r} metric")
     return problems
 
 
@@ -77,6 +94,38 @@ def validate_bench_serve(path: str) -> list[str]:
     return problems
 
 
+def validate_bench_dynamic(path: str) -> list[str]:
+    from benchmarks.bench_dynamic import CONFIG_KEYS, PARITY_TOL, SCHEMA
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable/unparsable JSON: {e}"]
+    problems = []
+    if doc.get("schema") != SCHEMA:
+        problems.append(f"{path}: schema != {SCHEMA} "
+                        f"(got {doc.get('schema')!r})")
+    if not doc.get("context", {}).get("git_sha"):
+        problems.append(f"{path}: missing run context git_sha stamp")
+    configs = doc.get("configs")
+    if not isinstance(configs, list) or not configs:
+        problems.append(f"{path}: empty or missing 'configs' list")
+        return problems
+    for i, c in enumerate(configs):
+        missing = [k for k in CONFIG_KEYS if k not in c]
+        if missing:
+            problems.append(f"{path}: configs[{i}] missing {missing}")
+        if c.get("parity", 1.0) > PARITY_TOL:
+            problems.append(f"{path}: configs[{i}] parity "
+                            f"{c.get('parity')} > {PARITY_TOL}")
+    comp = doc.get("comparison")
+    if not isinstance(comp, dict) or "pass" not in comp:
+        problems.append(f"{path}: missing 'comparison' verdict")
+    elif not comp["pass"]:
+        problems.append(f"{path}: comparison verdict failed: {comp}")
+    return problems
+
+
 def validate_prom(path: str) -> list[str]:
     from repro.obs import lint_prometheus
     try:
@@ -100,6 +149,8 @@ def main(argv=None) -> int:
             problems += validate_prom(path)
         elif os.path.basename(path).startswith("BENCH_serve"):
             problems += validate_bench_serve(path)
+        elif os.path.basename(path).startswith("BENCH_dynamic"):
+            problems += validate_bench_dynamic(path)
         else:
             problems += validate_json(path)
     for p in problems:
